@@ -1,0 +1,1 @@
+"""Paper-figure benchmarks (Figs. 9-14, Tables IV-V) + roofline reporting."""

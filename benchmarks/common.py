@@ -1,0 +1,58 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import Plan, serial_plan, solve
+from repro.core.speedup import EFFECTIVE_NFS_COST_MODEL
+from repro.mv import Workload, paper_workloads, simulate
+
+RESULTS = Path("results/bench")
+
+# paper setup: Memory Catalog = 1.6% of dataset size (1.6GB @ 100GB)
+DEFAULT_CATALOG_FRACTION = 0.016
+
+
+def catalog_bytes(scale_gb: float, fraction: float = DEFAULT_CATALOG_FRACTION):
+    return scale_gb * 1e9 * fraction
+
+
+def run_method(wl: Workload, method: str, budget: float,
+               cost_model=EFFECTIVE_NFS_COST_MODEL, n_workers: int = 1):
+    """End-to-end simulated time for one (workload, method)."""
+    g = wl.to_graph(cost_model)
+    if method == "serial":
+        return simulate(wl, serial_plan(g), cost_model, mode="serial",
+                        n_workers=n_workers)
+    if method == "lru":
+        return simulate(wl, serial_plan(g), cost_model, mode="lru",
+                        n_workers=n_workers, lru_budget=budget)
+    node_solver, order_solver = {
+        "sc": ("mkp", "madfs"),
+        "greedy": ("greedy", "madfs"),
+        "random": ("random", "madfs"),
+        "ratio": ("ratio", "madfs"),
+        "mkp+sa": ("mkp", "sa"),
+        "mkp+separator": ("mkp", "separator"),
+        "mkp+random_dfs": ("mkp", "random_dfs"),
+    }[method]
+    plan = solve(g, budget=budget, node_solver=node_solver,
+                 order_solver=order_solver)
+    return simulate(wl, plan, cost_model, mode="sc", n_workers=n_workers)
+
+
+def save_json(name: str, payload) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, default=str))
+    return p
+
+
+def fmt_table(headers: list[str], rows: list[list]) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) for i, h in
+              enumerate(headers)]
+    def line(vals):
+        return " | ".join(str(v).ljust(w) for v, w in zip(vals, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])

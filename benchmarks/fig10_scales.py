@@ -1,0 +1,39 @@
+"""Fig. 10: consistent speedup across dataset scales (10GB–1TB), Memory
+Catalog fixed at 1.6% of dataset size.
+
+Paper: 1.58×–1.71× on TPC-DS, 2.31×–4.26× on date-partitioned TPC-DSp."""
+from __future__ import annotations
+
+from repro.mv import paper_workloads
+
+from .common import catalog_bytes, fmt_table, run_method, save_json
+
+SCALES = (10.0, 25.0, 50.0, 100.0, 1000.0)
+
+
+def run(quick: bool = False):
+    scales = SCALES[:3] if quick else SCALES
+    out = {}
+    rows = []
+    for partitioned in (False, True):
+        tag = "TPC-DSp" if partitioned else "TPC-DS"
+        for scale in scales:
+            budget = catalog_bytes(scale)
+            total_serial = total_sc = 0.0
+            for wl in paper_workloads(scale, partitioned=partitioned):
+                total_serial += run_method(wl, "serial", budget).end_to_end
+                total_sc += run_method(wl, "sc", budget).end_to_end
+            sp = total_serial / total_sc
+            out[f"{tag}@{scale:g}GB"] = {
+                "serial_s": total_serial, "sc_s": total_sc, "speedup": sp
+            }
+            rows.append([tag, f"{scale:g}GB", f"{total_serial:.0f}",
+                         f"{total_sc:.0f}", f"{sp:.2f}x"])
+    print("\n== Fig 10: speedup across scales (1.6% Memory Catalog) ==")
+    print(fmt_table(["dataset", "scale", "serial(s)", "S/C(s)", "speedup"], rows))
+    save_json("fig10_scales", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

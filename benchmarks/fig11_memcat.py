@@ -1,0 +1,53 @@
+"""Fig. 11 + Table IV: Memory Catalog size sweep (0.4%–6.4% of data size) on
+the 100GB datasets; read/compute/query latency breakdown.
+
+Paper: 1.50× at 0.4% rising to 4.26× at 6.4% (TPC-DSp); table-read latency
+reduction 1.42×–1.51×; compute latency ~unchanged."""
+from __future__ import annotations
+
+from repro.mv import paper_workloads
+
+from .common import fmt_table, run_method, save_json
+
+FRACTIONS = (0.004, 0.008, 0.016, 0.032, 0.064)
+
+
+def run(scale_gb: float = 100.0, quick: bool = False):
+    out = {}
+    rows_f11, rows_t4 = [], []
+    for partitioned in (False, True):
+        tag = "TPC-DSp" if partitioned else "TPC-DS"
+        wls = paper_workloads(scale_gb, partitioned=partitioned)
+        base = {"read": 0.0, "compute": 0.0, "query": 0.0}
+        for wl in wls:
+            rep = run_method(wl, "serial", 0.0)
+            base["read"] += rep.blocking_read_seconds
+            base["compute"] += rep.compute_seconds
+            base["query"] += rep.end_to_end
+        rows_t4.append([tag, "No opt", f"{base['read']:.0f}",
+                        f"{base['compute']:.0f}", f"{base['query']:.0f}"])
+        for frac in FRACTIONS:
+            budget = scale_gb * 1e9 * frac
+            agg = {"read": 0.0, "compute": 0.0, "query": 0.0}
+            for wl in wls:
+                rep = run_method(wl, "sc", budget)
+                agg["read"] += rep.blocking_read_seconds
+                agg["compute"] += rep.compute_seconds
+                agg["query"] += rep.end_to_end
+            speedup = base["query"] / agg["query"]
+            out[f"{tag}@{frac:.3%}"] = {**agg, "speedup": speedup}
+            rows_f11.append([tag, f"{frac:.1%}", f"{agg['query']:.0f}",
+                             f"{speedup:.2f}x"])
+            rows_t4.append([tag, f"{frac:.1%}", f"{agg['read']:.0f}",
+                            f"{agg['compute']:.0f}", f"{agg['query']:.0f}"])
+    print("\n== Fig 11: speedup vs Memory Catalog size (100GB) ==")
+    print(fmt_table(["dataset", "catalog", "total(s)", "speedup"], rows_f11))
+    print("\n== Table IV: latency breakdown (seconds) ==")
+    print(fmt_table(["dataset", "catalog", "table read", "compute", "query"],
+                    rows_t4))
+    save_json("fig11_memcat", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs every paper-figure benchmark (Figs. 9–14, Tables IV–V), the real-executor
+wall-clock validation, and the roofline report from whatever dry-run records
+exist. ``--quick`` trims sweep sizes. Exit code is non-zero if any module
+raises."""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (
+    fig9_end_to_end,
+    fig10_scales,
+    fig12_ablation,
+    fig13_opttime,
+    fig14_sweep,
+    real_executor,
+    roofline,
+    table4_readtime,
+    table5_cluster,
+)
+
+MODULES = [
+    ("fig9_end_to_end", fig9_end_to_end.run),
+    ("fig10_scales", fig10_scales.run),
+    ("fig11_memcat+table4", table4_readtime.run),   # table4 drives fig11
+    ("fig12_ablation", fig12_ablation.run),
+    ("table5_cluster", table5_cluster.run),
+    ("fig13_opttime", fig13_opttime.run),
+    ("fig14_sweep", fig14_sweep.run),
+    ("real_executor", real_executor.run),
+    ("roofline", lambda quick: roofline.run(mesh="single", quick=quick)),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    failures = []
+    for name, fn in MODULES:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n{'='*72}\n[benchmarks] {name}\n{'='*72}")
+        t0 = time.perf_counter()
+        try:
+            fn(quick=args.quick)
+            print(f"[benchmarks] {name} done in {time.perf_counter()-t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nAll benchmarks completed.")
+
+
+if __name__ == "__main__":
+    main()

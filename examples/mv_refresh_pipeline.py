@@ -1,0 +1,41 @@
+"""The paper's scenario inside the training framework: a recurring
+data-materialization pipeline (ingest → tokenize → pack → stats → index)
+scheduled by S/C with a bounded in-RAM catalog, then consumed by the
+deterministic batch iterator.
+
+    PYTHONPATH=src python examples/mv_refresh_pipeline.py
+"""
+import shutil
+import tempfile
+from pathlib import Path
+
+from repro.data import BatchIterator, DataConfig, materialize_dataset
+
+root = Path(tempfile.mkdtemp(prefix="sc_pipeline_"))
+try:
+    dcfg = DataConfig(n_shards=4, docs_per_shard=64, doc_len=256,
+                      seq_len=65, catalog_budget_bytes=2 << 20)
+    out = materialize_dataset(dcfg, root)
+    plan, report, wl = out["plan"], out["report"], out["workload"]
+
+    print("=== S/C-scheduled data materialization ===")
+    print(f"nodes: {wl.n}   flagged in memory: {len(plan.flagged)}")
+    print(f"execution order: {[wl.nodes[i].name for i in plan.order]}")
+    print(f"catalog hits: {report.catalog_hits}   disk reads: {report.disk_reads}")
+    print(f"peak catalog: {report.peak_catalog_bytes/1e6:.2f}MB "
+          f"(budget {dcfg.catalog_budget_bytes/1e6:.2f}MB)")
+    print(f"all {wl.n} artifacts persisted: "
+          f"{sorted(out['store'].manifest())[:5]} ...")
+
+    it = BatchIterator(root, dcfg, batch_size=8)
+    batch = it.next_batch()
+    print(f"\nfirst batch: tokens {batch['tokens'].shape} "
+          f"labels {batch['labels'].shape}")
+    snap = it.get_state()
+    a = it.next_batch()["tokens"]
+    it.set_state(snap)
+    b = it.next_batch()["tokens"]
+    assert (a == b).all(), "iterator must replay deterministically"
+    print("iterator state snapshot/restore: deterministic replay OK")
+finally:
+    shutil.rmtree(root, ignore_errors=True)

@@ -1,0 +1,25 @@
+"""Batched serving example: prefill a prompt batch, then greedy-decode with
+the sharded KV/SSD-state cache — including a hybrid (Jamba-family) model whose
+cache mixes KV tensors and SSM states.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.step import greedy_generate
+
+for arch in ("musicgen-large", "jamba-v0.1-52b"):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
+                                cfg.vocab_size)
+    t0 = time.perf_counter()
+    out = greedy_generate(cfg, params, prompt, max_new=12)
+    dt = time.perf_counter() - t0
+    print(f"{arch:18s} ({cfg.family:6s}): generated {out.shape} in {dt:.2f}s "
+          f"-> {out[0, :8].tolist()}")
+print("decode caches validated against full-forward logits in tests/models/")

@@ -1,0 +1,3 @@
+"""repro — S/C (Speeding up Data Materialization with Bounded Memory) on JAX/TPU."""
+
+__version__ = "0.1.0"

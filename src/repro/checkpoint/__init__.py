@@ -1,0 +1,4 @@
+"""Async write-behind checkpointing (atomic, topology-agnostic)."""
+from .ckpt import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,41 @@
+"""S/C core: the paper's contribution (S/C Opt joint optimization)."""
+from .altopt import Plan, serial_plan, solve
+from .graph import MVGraph, from_parent_lists, positions
+from .madfs import ORDER_SOLVERS, ma_dfs, random_dfs, separator, simulated_annealing
+from .mkp import (
+    NODE_SOLVERS,
+    branch_and_bound_mkp,
+    excluded_nodes,
+    get_constraints,
+    greedy_select,
+    random_select,
+    ratio_select,
+    simplified_mkp,
+)
+from .speedup import PAPER_COST_MODEL, CostModel, rescore, score_graph
+
+__all__ = [
+    "Plan",
+    "MVGraph",
+    "CostModel",
+    "PAPER_COST_MODEL",
+    "solve",
+    "serial_plan",
+    "simplified_mkp",
+    "branch_and_bound_mkp",
+    "get_constraints",
+    "excluded_nodes",
+    "greedy_select",
+    "random_select",
+    "ratio_select",
+    "ma_dfs",
+    "random_dfs",
+    "simulated_annealing",
+    "separator",
+    "score_graph",
+    "rescore",
+    "from_parent_lists",
+    "positions",
+    "NODE_SOLVERS",
+    "ORDER_SOLVERS",
+]

@@ -1,0 +1,207 @@
+"""Dependency-graph model for S/C Opt (paper §IV).
+
+An ``MVGraph`` is a DAG whose nodes are individual materialization jobs (MV
+updates in the paper; dataset/checkpoint/activation artifacts in the framework
+integrations). Each node carries a size ``s_i`` (bytes the artifact occupies in
+the Memory Catalog) and a speedup score ``t_i`` (estimated end-to-end seconds
+saved by *flagging* the node, i.e. keeping its output in bounded memory until
+its last consumer has executed).
+
+Core semantics implemented here, exactly as defined in the paper:
+
+* execution order ``tau``: a topological permutation of nodes; we represent it
+  as ``order`` (``order[k]`` = node executed at step ``k``).
+* residency: a flagged node ``j`` is resident in the Memory Catalog from its
+  own execution step until the step of its **last child**
+  (``lc(j) = max_{(j,k) in E} pos[k]``, or ``pos[j]`` for childless nodes).
+* resident set ``V_i = {j : pos[j] <= pos[i] <= lc(j)}`` — the candidate nodes
+  co-resident while node ``i`` executes (paper §V-A). These become the MKP
+  capacity constraints.
+* peak memory usage  = max_i  sum_{j in V_i ∩ U} s_j          (constraint)
+* average memory usage = (1/n) sum_{i in U} (lc(i)-pos[i])·s_i (Opt-Order obj.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Iterable, Mapping, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class MVGraph:
+    """Immutable DAG with per-node sizes and speedup scores."""
+
+    n: int
+    edges: tuple[tuple[int, int], ...]
+    sizes: tuple[float, ...]
+    scores: tuple[float, ...]
+    names: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if len(self.sizes) != self.n or len(self.scores) != self.n:
+            raise ValueError("sizes/scores length must equal n")
+        for a, b in self.edges:
+            if not (0 <= a < self.n and 0 <= b < self.n):
+                raise ValueError(f"edge ({a},{b}) out of range")
+            if a == b:
+                raise ValueError("self-loop")
+        if not self.names:
+            object.__setattr__(self, "names", tuple(f"v{i}" for i in range(self.n)))
+        # cycle check via Kahn
+        if len(self.topological_order()) != self.n:
+            raise ValueError("graph has a cycle")
+
+    # -- adjacency ----------------------------------------------------------
+    @cached_property
+    def children(self) -> tuple[tuple[int, ...], ...]:
+        out: list[list[int]] = [[] for _ in range(self.n)]
+        for a, b in self.edges:
+            out[a].append(b)
+        return tuple(tuple(c) for c in out)
+
+    @cached_property
+    def parents(self) -> tuple[tuple[int, ...], ...]:
+        out: list[list[int]] = [[] for _ in range(self.n)]
+        for a, b in self.edges:
+            out[b].append(a)
+        return tuple(tuple(p) for p in out)
+
+    @cached_property
+    def roots(self) -> tuple[int, ...]:
+        return tuple(i for i in range(self.n) if not self.parents[i])
+
+    def topological_order(self) -> list[int]:
+        """Kahn topological order (deterministic: lowest index first)."""
+        import heapq
+
+        indeg = [len(self.parents[i]) for i in range(self.n)]
+        heap = [i for i in range(self.n) if indeg[i] == 0]
+        heapq.heapify(heap)
+        order: list[int] = []
+        while heap:
+            v = heapq.heappop(heap)
+            order.append(v)
+            for c in self.children[v]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    heapq.heappush(heap, c)
+        return order
+
+    # -- order helpers -------------------------------------------------------
+    def is_topological(self, order: Sequence[int]) -> bool:
+        if sorted(order) != list(range(self.n)):
+            return False
+        pos = positions(order)
+        return all(pos[a] < pos[b] for a, b in self.edges)
+
+    def last_child_pos(self, order: Sequence[int]) -> list[int]:
+        """lc(i): step of i's last child; own step for childless nodes."""
+        pos = positions(order)
+        return [
+            max((pos[c] for c in self.children[i]), default=pos[i])
+            for i in range(self.n)
+        ]
+
+    # -- memory accounting ----------------------------------------------------
+    def residency_profile(
+        self, flagged: Iterable[int], order: Sequence[int]
+    ) -> list[float]:
+        """Bytes of flagged data resident in the catalog at each step."""
+        pos = positions(order)
+        lc = self.last_child_pos(order)
+        prof = [0.0] * self.n
+        for i in set(flagged):
+            for k in range(pos[i], lc[i] + 1):
+                prof[k] += self.sizes[i]
+        return prof
+
+    def peak_memory(self, flagged: Iterable[int], order: Sequence[int]) -> float:
+        prof = self.residency_profile(flagged, order)
+        return max(prof) if prof else 0.0
+
+    def avg_memory(self, flagged: Iterable[int], order: Sequence[int]) -> float:
+        """Paper Opt-Order objective: (1/n) Σ_{i∈U} (lc(i) − pos(i))·s_i."""
+        pos = positions(order)
+        lc = self.last_child_pos(order)
+        return sum((lc[i] - pos[i]) * self.sizes[i] for i in set(flagged)) / max(
+            self.n, 1
+        )
+
+    def is_feasible(
+        self, flagged: Iterable[int], order: Sequence[int], budget: float
+    ) -> bool:
+        return self.peak_memory(flagged, order) <= budget + 1e-9
+
+    def total_score(self, flagged: Iterable[int]) -> float:
+        return sum(self.scores[i] for i in set(flagged))
+
+    # -- resident sets (MKP constraints) --------------------------------------
+    def resident_sets(
+        self, order: Sequence[int], exclude: frozenset[int] = frozenset()
+    ) -> list[frozenset[int]]:
+        """V_i for every step, restricted to non-excluded candidate nodes.
+
+        Computed with a single linear scan (paper: GetConstraints is linear):
+        nodes enter at their own step and leave after their last child's step.
+        """
+        pos = positions(order)
+        lc = self.last_child_pos(order)
+        leave_at: list[list[int]] = [[] for _ in range(self.n)]
+        for i in range(self.n):
+            if i not in exclude:
+                leave_at[lc[i]].append(i)
+        active: set[int] = set()
+        out: list[frozenset[int]] = []
+        for k, v in enumerate(order):
+            if v not in exclude:
+                active.add(v)
+            out.append(frozenset(active))
+            for i in leave_at[k]:
+                active.discard(i)
+        return out
+
+    # -- misc ------------------------------------------------------------------
+    def subgraph(self, keep: Sequence[int]) -> "MVGraph":
+        remap = {v: i for i, v in enumerate(keep)}
+        kset = set(keep)
+        edges = tuple(
+            (remap[a], remap[b]) for a, b in self.edges if a in kset and b in kset
+        )
+        return MVGraph(
+            n=len(keep),
+            edges=edges,
+            sizes=tuple(self.sizes[v] for v in keep),
+            scores=tuple(self.scores[v] for v in keep),
+            names=tuple(self.names[v] for v in keep),
+        )
+
+    def to_networkx(self):
+        import networkx as nx
+
+        g = nx.DiGraph()
+        g.add_nodes_from(range(self.n))
+        g.add_edges_from(self.edges)
+        return g
+
+
+def positions(order: Sequence[int]) -> list[int]:
+    """pos[i] = step at which node i executes."""
+    pos = [0] * len(order)
+    for k, v in enumerate(order):
+        pos[v] = k
+    return pos
+
+
+def from_parent_lists(
+    parents: Mapping[int, Sequence[int]] | Sequence[Sequence[int]],
+    sizes: Sequence[float],
+    scores: Sequence[float],
+    names: Sequence[str] = (),
+) -> MVGraph:
+    n = len(sizes)
+    if isinstance(parents, Mapping):
+        plist = [tuple(parents.get(i, ())) for i in range(n)]
+    else:
+        plist = [tuple(p) for p in parents]
+    edges = tuple((p, i) for i in range(n) for p in plist[i])
+    return MVGraph(n, edges, tuple(sizes), tuple(scores), tuple(names))

@@ -1,0 +1,98 @@
+"""Speedup-score model (paper §IV, "Speedup Scores").
+
+    t_i =   Σ_{(v_i,v_j)∈E} [ read(v_i | disk) − read(v_i | memory) ]
+          + [ create(v_i | disk) − create(v_i | memory) ]
+
+The first term is saved once per child (each consumer reads the parent from
+the catalog instead of storage); the second is the write that moves off the
+critical path (materialization happens in the background, Fig. 6 t2..t4).
+
+The cost model is bandwidth/latency based, with defaults matching the paper's
+experiment environment (519.8 MB/s disk read, 358.9 MB/s disk write, 175 µs
+read latency). Memory bandwidth defaults to a conservative DRAM figure. All
+sizes are bytes, all times seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .graph import MVGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    disk_read_bw: float = 519.8e6
+    disk_write_bw: float = 358.9e6
+    mem_read_bw: float = 10e9
+    mem_write_bw: float = 10e9
+    disk_latency: float = 175e-6
+    # large sequential base-table scans sustain full bandwidth even when the
+    # many-file intermediate I/O path is derated (0 = same as disk_read_bw)
+    seq_read_bw: float = 0.0
+    # fraction of the background write that still interferes with compute
+    write_interference: float = 0.0
+
+    def read_disk(self, size: float) -> float:
+        return self.disk_latency + size / self.disk_read_bw
+
+    def read_base(self, size: float) -> float:
+        bw = self.seq_read_bw or self.disk_read_bw
+        return self.disk_latency + size / bw
+
+    def read_mem(self, size: float) -> float:
+        return size / self.mem_read_bw
+
+    def write_disk(self, size: float) -> float:
+        return size / self.disk_write_bw
+
+    def write_mem(self, size: float) -> float:
+        return size / self.mem_write_bw
+
+    def speedup_score(self, size: float, n_children: int) -> float:
+        per_child = self.read_disk(size) - self.read_mem(size)
+        create = self.write_disk(size) - self.write_mem(size)
+        create *= 1.0 - self.write_interference
+        return max(0.0, n_children * per_child + create)
+
+
+PAPER_COST_MODEL = CostModel()
+
+# Effective NFS throughput *during MV refresh*: the paper's 519.8/358.9 MB/s
+# are sequential microbenchmarks; concurrent multi-file Parquet writes +
+# metadata traffic over NFS sustain far less. This derated model is what makes
+# the simulator consistent with the paper's own wall-clock anchors (Table V:
+# 1528s no-opt, 1.63x S/C at 100GB) — see EXPERIMENTS.md §Calibration.
+EFFECTIVE_NFS_COST_MODEL = CostModel(
+    disk_read_bw=150e6,
+    disk_write_bw=100e6,
+    disk_latency=175e-6,
+    seq_read_bw=519.8e6,   # base-table scans stay sequential-fast
+)
+
+
+def score_graph(
+    n: int,
+    edges: Sequence[tuple[int, int]],
+    sizes: Sequence[float],
+    cost_model: CostModel = PAPER_COST_MODEL,
+    names: Sequence[str] = (),
+) -> MVGraph:
+    """Build an MVGraph with speedup scores derived from the cost model."""
+    n_children = [0] * n
+    for a, _ in edges:
+        n_children[a] += 1
+    scores = tuple(
+        cost_model.speedup_score(sizes[i], n_children[i]) for i in range(n)
+    )
+    return MVGraph(
+        n=n,
+        edges=tuple(edges),
+        sizes=tuple(float(s) for s in sizes),
+        scores=scores,
+        names=tuple(names),
+    )
+
+
+def rescore(graph: MVGraph, cost_model: CostModel) -> MVGraph:
+    return score_graph(graph.n, graph.edges, graph.sizes, cost_model, graph.names)

@@ -1,0 +1,14 @@
+"""S/C-scheduled data materialization + checkpointable batch iterator."""
+from .pipeline import (
+    BatchIterator,
+    DataConfig,
+    build_pipeline_workload,
+    materialize_dataset,
+)
+
+__all__ = [
+    "DataConfig",
+    "build_pipeline_workload",
+    "materialize_dataset",
+    "BatchIterator",
+]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots + jnp oracles."""
+from . import ops, ref
+from .flash_attention import flash_attention, flash_attention_bwd, flash_attention_fwd
+from .rmsnorm import rmsnorm
+from .ssd_scan import ssd_scan
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention",
+    "flash_attention_fwd",
+    "flash_attention_bwd",
+    "ssd_scan",
+    "rmsnorm",
+]

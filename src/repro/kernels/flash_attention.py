@@ -1,0 +1,358 @@
+"""Flash attention (fwd + bwd) as Pallas TPU kernels.
+
+TPU-native design (not a CUDA port): the grid's innermost dimension iterates
+KV blocks *sequentially* (TPU grid order is sequential on-core), carrying the
+running max / normalizer / accumulator in VMEM scratch — the online-softmax
+recurrence mapped onto the MXU with explicit BlockSpec tiling:
+
+* fwd : grid (b, h, q_blocks, kv_blocks); q block stays resident in VMEM, k/v
+        blocks stream; out + logsumexp written at the last kv step.
+* bwd : two kernels (the standard TPU decomposition, each with clean
+        sequential accumulation): dq over (q_blocks outer, kv inner) and
+        dk/dv over (kv_blocks outer, q inner), using the saved logsumexp and
+        the precomputed delta = rowsum(do ⊙ o).
+
+GQA is native in the forward (kv head = query head // group via the k/v
+index_map — no materialized repeat); the backward wrapper repeats kv heads
+and group-sums dk/dv (documented trade-off; a production variant would fuse
+the group reduction into the dkv kernel).
+
+Block sizes default to 128 (MXU-aligned); sequences are padded to block
+multiples and masked via the true ``kv_len``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+# ---------------------------------------------------------------------------
+# forward kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, bq: int, bk: int, kv_len: int, nk: int,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip kv blocks strictly above this q block's last row
+    run = (ik * bk <= (iq + 1) * bq - 1) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        col = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = col < kv_len
+        if causal:
+            row = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = jnp.logical_and(mask, col <= row)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        safe_m = jnp.where(m_new == NEG_INF, 0.0, m_new)  # avoid inf-inf
+        p = jnp.exp(s - safe_m[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - safe_m))
+        l_new = l_scr[:, 0] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        m = m_scr[:, 0]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+        # padded / fully-masked rows get lse=+inf so bwd exp(s-lse)=0
+        lse_ref[0, 0] = jnp.where(l > 0, m + jnp.log(safe_l), jnp.inf)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (b, hq, sq, d)
+    k: jax.Array,  # (b, hkv, sk, d)
+    v: jax.Array,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(sk, 8))
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    sqp, skp = qp.shape[2], kp.shape[2]
+    nq, nk = sqp // bq, skp // bk
+
+    grid = (b, hq, nq, nk)
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, bq=bq, bk=bk, kv_len=sk, nk=nk
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sqp, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, sqp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :sq], lse[:, :, :sq]
+
+
+# ---------------------------------------------------------------------------
+# backward kernels
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, dq_scr,
+    *, scale: float, causal: bool, bq: int, bk: int, kv_len: int, nk: int,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    run = (ik * bk <= (iq + 1) * bq - 1) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        col = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = col < kv_len
+        if causal:
+            row = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = jnp.logical_and(mask, col <= row)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta[:, None]) * scale
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *, scale: float, causal: bool, bq: int, bk: int, kv_len: int, nq: int,
+):
+    ik, iq = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    # causal: q blocks strictly before this kv block contribute nothing
+    run = ((iq + 1) * bq - 1 >= ik * bk) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        col = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = col < kv_len
+        if causal:
+            row = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = jnp.logical_and(mask, col <= row)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)  # (bq, bk)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta[:, None]) * scale  # (bq, bk)
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(iq == nq - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k, v, out, lse, do,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """dq, dk, dv. k/v here are per-*query*-head (wrapper repeats GQA heads)."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(sk, 8))
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    qp, dop = _pad_to(q, 2, bq), _pad_to(do, 2, bq)
+    kp, vp = _pad_to(k, 2, bk), _pad_to(v, 2, bk)
+    lsep = _pad_to(lse, 2, bq)
+    # padded q rows must produce p=0: lse=+inf does that
+    if lsep.shape[2] != sq:
+        padmask = jnp.arange(lsep.shape[2]) >= sq
+        lsep = jnp.where(padmask[None, None, :], jnp.inf, lsep)
+    deltap = _pad_to(delta, 2, bq)
+    sqp, skp = qp.shape[2], kp.shape[2]
+    nq, nk = sqp // bq, skp // bk
+
+    common = dict(scale=scale, causal=causal, bq=bq, bk=bk, kv_len=sk)
+    qspec = pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0))
+    kspec = pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih, ik, 0))
+    rspec = pl.BlockSpec((1, 1, bq), lambda ib, ih, iq, ik: (ib, ih, iq))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, nk=nk, **common),
+        grid=(b, h, nq, nk),
+        in_specs=[qspec, kspec, kspec, qspec, rspec, rspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((b, h, sqp, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, deltap)
+
+    # dkv: swap grid so kv blocks are outer, q inner
+    qspec2 = pl.BlockSpec((1, 1, bq, d), lambda ib, ih, ik, iq: (ib, ih, iq, 0))
+    kspec2 = pl.BlockSpec((1, 1, bk, d), lambda ib, ih, ik, iq: (ib, ih, ik, 0))
+    rspec2 = pl.BlockSpec((1, 1, bq), lambda ib, ih, ik, iq: (ib, ih, iq))
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, nq=nq, **common),
+        grid=(b, h, nk, nq),
+        in_specs=[qspec2, kspec2, kspec2, qspec2, rspec2, rspec2],
+        out_specs=[kspec2, kspec2],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, skp, d), k.dtype),
+            jax.ShapeDtypeStruct((b, h, skp, d), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, d), jnp.float32),
+            pltpu.VMEM((bk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, deltap)
+    return dq[:, :, :sq], dk[:, :, :sk], dv[:, :, :sk]
+
+
+# ---------------------------------------------------------------------------
+# differentiable public entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(
+    q, k, v,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    out, _ = flash_attention_fwd(q, k, v, causal, scale, block_q, block_k, interpret)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, scale, block_q, block_k, interpret):
+    out, lse = flash_attention_fwd(q, k, v, causal, scale, block_q, block_k, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, scale, block_q, block_k, interpret, res, do):
+    q, k, v, out, lse = res
+    hq, hkv = q.shape[1], k.shape[1]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    dq, dkr, dvr = flash_attention_bwd(
+        q, kr, vr, out, lse, do, causal, scale, block_q, block_k, interpret
+    )
+    b, _, sk, d = k.shape
+    dk = dkr.reshape(b, hkv, group, sk, d).sum(axis=2).astype(k.dtype)
+    dv = dvr.reshape(b, hkv, group, sk, d).sum(axis=2).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,58 @@
+"""Public kernel entry points with implementation dispatch.
+
+``impl`` resolution:
+* ``"xla"``     — the pure-jnp reference (ref.py). Default on CPU/GPU hosts:
+                  the multi-pod dry-run lowers these, and XLA:TPU also fuses
+                  them acceptably when Pallas is disabled.
+* ``"pallas"``  — the Pallas TPU kernels (TARGET path on real v5e pods).
+* ``"interpret"`` — Pallas kernels under the interpreter (CPU correctness
+                  validation; what the kernel tests exercise).
+* ``"auto"``    — pallas on TPU backends, xla elsewhere; override with
+                  REPRO_KERNEL_IMPL env var.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from . import flash_attention as _fa
+from . import ref
+from . import rmsnorm as _rn
+from . import ssd_scan as _ssd
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
+                    impl: str = "auto", block_q: int = 128, block_k: int = 128):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.attention(q, k, v, causal=causal, scale=scale)
+    return _fa.flash_attention(
+        q, k, v, causal, scale, block_q, block_k, impl == "interpret"
+    )
+
+
+def ssd_scan(x, dt, a, bmat, cmat, chunk: int = 64, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.ssd_scan_chunked(x, dt, a, bmat, cmat, chunk=min(chunk, x.shape[1]))
+    return _ssd.ssd_scan(x, dt, a, bmat, cmat, chunk=chunk,
+                         interpret=impl == "interpret")
+
+
+def rmsnorm(x, w, eps: float = 1e-6, residual=None, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.rmsnorm(x, w, eps=eps, residual=residual)
+    return _rn.rmsnorm(x, w, eps=eps, residual=residual,
+                       interpret=impl == "interpret")

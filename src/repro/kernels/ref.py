@@ -1,0 +1,172 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the semantics of record: kernels are validated against them in
+interpret mode (tests sweep shapes/dtypes with assert_allclose), and the model
+stack uses them as the XLA path on non-TPU backends (the dry-run lowers these;
+on real TPU ``repro.kernels.ops`` swaps in the Pallas implementations).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention (causal, GQA)
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jax.Array,  # (b, hq, sq, d)
+    k: jax.Array,  # (b, hkv, sk, d)
+    v: jax.Array,  # (b, hkv, sk, d)
+    causal: bool = True,
+    scale: float | None = None,
+    kv_len: jax.Array | None = None,  # (b,) valid kv length (decode masking)
+    q_offset: int | jax.Array = 0,    # absolute position of q[0] (decode)
+) -> jax.Array:
+    """GQA attention WITHOUT materializing repeated k/v: q is reshaped to
+    (b, hkv, group, s, d) and contracted against the kv heads directly — a
+    materialized repeat costs ~17GB of temp at llama3-405b decode_32k
+    (§Perf iteration C2)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    qg = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkTd->bkgqT", qg, k.astype(jnp.float32)) * scale
+    sk = k.shape[2]
+    col = jnp.arange(sk)
+    if causal:
+        row = jnp.arange(sq) + q_offset
+        mask = col[None, :] <= row[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    if kv_len is not None:
+        valid = col[None, :] < kv_len[:, None]
+        s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqT,bkTd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def attention_with_lse(q, k, v, causal=True, scale=None):
+    """Like :func:`attention` but also returns the log-sum-exp (for flash bwd)."""
+    b, hq, sq, d = q.shape
+    group = hq // k.shape[1]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s *= scale
+    if causal:
+        sk = k.shape[2]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lse[..., None])
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype), lse
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) — sequential oracle + chunked closed form
+# ---------------------------------------------------------------------------
+
+def ssd_scan_sequential(
+    x: jax.Array,   # (b, s, h, p)   per-head inputs
+    dt: jax.Array,  # (b, s, h)      softplus'd timestep
+    a: jax.Array,   # (h,)           negative decay rate per head
+    bmat: jax.Array,  # (b, s, n)    input projection (shared across heads)
+    cmat: jax.Array,  # (b, s, n)    output projection
+) -> jax.Array:
+    """Exact recurrence: h_t = exp(dt_t a) h_{t-1} + dt_t x_t B_t^T ;
+    y_t = h_t C_t. Shapes follow Mamba-2 (scalar A per head)."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    def step(hstate, inputs):
+        xt, dtt, bt, ct = inputs  # (b,h,p) (b,h) (b,n) (b,n)
+        decay = jnp.exp(dtt * af[None, :])  # (b,h)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        hstate = hstate * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", hstate, ct)
+        return hstate, yt
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(bf, 1, 0),
+        jnp.moveaxis(cf, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (b,s,h,p)
+
+
+def ssd_scan_chunked(x, dt, a, bmat, cmat, chunk: int = 64) -> jax.Array:
+    """Chunked SSD (the quadratic-intra/linear-inter decomposition of the
+    Mamba-2 paper) in pure jnp — this is what the Pallas kernel implements."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = bmat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cf = cmat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    af = a.astype(jnp.float32)
+
+    seg = dtf * af[None, None, None, :]          # (b,nc,L,h) log-decay increments
+    cum = jnp.cumsum(seg, axis=2)                # inclusive cumsum within chunk
+    total = cum[:, :, -1, :]                     # (b,nc,h)
+
+    # intra-chunk (masked attention-like): y_ij over positions i>=j
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,L,L,h) = cum_i - cum_j
+    li = jnp.arange(chunk)
+    mask = (li[:, None] >= li[None, :])[None, None, :, :, None]
+    # clamp masked (upper-tri) exponents to 0 BEFORE exp: they can overflow to
+    # inf, and `where` does not protect the exp VJP from 0*inf = NaN.
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, rel, 0.0)), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cf, bf)   # (b,nc,L,L)
+    xdt = xf * dtf[..., None]                    # (b,nc,L,h,p)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, xdt)
+
+    # chunk states: S_c = sum_j exp(total - cum_j) dt_j x_j B_j^T  (b,nc,h,p,n)
+    w = jnp.exp(total[:, :, None, :] - cum)      # (b,nc,L,h)
+    state = jnp.einsum("bclh,bclhp,bcln->bchpn", w, xdt, bf)
+
+    # inter-chunk recurrence over running state H
+    def step(hstate, inp):
+        st, tot = inp  # (b,h,p,n), (b,h)
+        out = hstate
+        hstate = hstate * jnp.exp(tot)[..., None, None] + st
+        return hstate, out
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, hpre = jax.lax.scan(
+        step, h0, (jnp.moveaxis(state, 1, 0), jnp.moveaxis(total, 1, 0))
+    )
+    hpre = jnp.moveaxis(hpre, 0, 1)              # (b,nc,h,p,n) state before chunk
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", cf, jnp.exp(cum), hpre)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm (+ optional residual)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+            residual: jax.Array | None = None) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)

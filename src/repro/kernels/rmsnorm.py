@@ -1,0 +1,76 @@
+"""Fused RMSNorm (+ optional residual add) Pallas kernel.
+
+One VMEM pass per row block: residual add, mean-of-squares, rsqrt scale and
+weight multiply — the memory-bound prologue of every transformer block fused
+into a single HBM read/write."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def _rmsnorm_res_kernel(x_ref, r_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def rmsnorm(
+    x: jax.Array,            # (..., d)
+    w: jax.Array,            # (d,)
+    eps: float = 1e-6,
+    residual: jax.Array | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    nrows = x2.shape[0]
+    grid = (nrows // br,)
+    xspec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    wspec = pl.BlockSpec((d,), lambda i: (0,))
+    if residual is None:
+        out = pl.pallas_call(
+            functools.partial(_rmsnorm_kernel, eps=eps),
+            grid=grid,
+            in_specs=[xspec, wspec],
+            out_specs=xspec,
+            out_shape=jax.ShapeDtypeStruct((nrows, d), x.dtype),
+            interpret=interpret,
+        )(x2, w)
+    else:
+        r2 = residual.reshape(rows, d)
+        if pad:
+            r2 = jnp.pad(r2, ((0, pad), (0, 0)))
+        out = pl.pallas_call(
+            functools.partial(_rmsnorm_res_kernel, eps=eps),
+            grid=grid,
+            in_specs=[xspec, xspec, wspec],
+            out_specs=xspec,
+            out_shape=jax.ShapeDtypeStruct((nrows, d), x.dtype),
+            interpret=interpret,
+        )(x2, r2, w)
+    return out[:rows].reshape(shape)

@@ -1,0 +1,107 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+TPU-native adaptation of the SSD algorithm: the sequence is split into chunks
+of length L; the grid is (batch, heads, chunks) with chunks innermost —
+sequential on TPU — so the inter-chunk state (head_dim × state) lives in VMEM
+scratch and is carried across chunk iterations. Per chunk everything is MXU
+matmuls:
+
+* intra-chunk: y += (C Bᵀ ⊙ decay-mask) (x·dt)          — (L,L)·(L,P)
+* inter-chunk: y += (C ⊙ exp(cum)) H_prevᵀ              — (L,N)·(N,P)
+* state update: H = exp(total)·H + ((x·dt) ⊙ w)ᵀ B      — (P,L)·(L,N)
+
+The pure-jnp oracle is ``ref.ssd_scan_sequential`` (exact recurrence) and
+``ref.ssd_scan_chunked`` (the same closed form this kernel computes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (L,)
+    a = a_ref[0].astype(jnp.float32)               # scalar decay rate (<0)
+    bmat = b_ref[0].astype(jnp.float32)            # (L, N)
+    cmat = c_ref[0].astype(jnp.float32)            # (L, N)
+
+    seg = dt * a                                   # (L,)
+    cum = jnp.cumsum(seg)                          # inclusive
+    total = cum[-1]
+
+    # intra-chunk
+    rel = cum[:, None] - cum[None, :]              # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = li >= lj
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, rel, 0.0)), 0.0)
+    cb = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (L, L)
+    xdt = x * dt[:, None]                          # (L, P)
+    y = jax.lax.dot_general(
+        cb * decay, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # (L, P)
+
+    # inter-chunk: contribution of the carried state
+    c_scaled = cmat * jnp.exp(cum)[:, None]        # (L, N)
+    y += jax.lax.dot_general(
+        c_scaled, h_scr[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # (L,N)x(P,N)->(L,P)
+
+    # state update
+    w = jnp.exp(total - cum)                       # (L,)
+    h_scr[...] = jnp.exp(total) * h_scr[...] + jax.lax.dot_general(
+        xdt * w[:, None], bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # (P, N)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,     # (b, s, h, p)
+    dt: jax.Array,    # (b, s, h)
+    a: jax.Array,     # (h,)
+    bmat: jax.Array,  # (b, s, n)
+    cmat: jax.Array,  # (b, s, n)
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} must divide chunk {chunk}"
+    nc = s // chunk
+
+    grid = (b, h, nc)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bmat, cmat)

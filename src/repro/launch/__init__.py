@@ -1,0 +1,8 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import .dryrun here — it sets XLA_FLAGS at import time and must
+only be imported as the entry point of a dedicated process.
+"""
+from .mesh import make_local_mesh, make_production_mesh, required_devices
+
+__all__ = ["make_production_mesh", "make_local_mesh", "required_devices"]

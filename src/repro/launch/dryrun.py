@@ -1,0 +1,421 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation), jits the right step function with the
+strategy shardings, and runs ``.lower().compile()``. It records
+``memory_analysis()`` (fits-on-chip proof), ``cost_analysis()`` (FLOPs/bytes
+for §Roofline) and the per-collective byte totals parsed from the post-SPMD
+HLO into ``results/dryrun/<arch>__<shape>__<mesh>.json``.
+
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first init) and must never leak into tests/benches — hence module-local.
+(No `from __future__ import annotations`: the XLA_FLAGS lines must be the
+very first statements of this module.)
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import SHAPES, ModelConfig, ShapeSpec, all_configs, get_config
+from ..models import init_params, make_cache
+from ..serve.step import make_decode_step, make_prefill_step
+from ..sharding.strategy import (
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    param_specs,
+)
+from ..train.step import init_train_state, make_train_step, train_state_specs
+from .mesh import make_production_mesh
+
+RESULTS_DIR = Path("results/dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _dp_for_batch(batch: int, mesh) -> P:
+    """Batch axis spec: full DP when divisible, else progressively fewer axes
+    (long_500k has global_batch=1 → replicated batch, model-only sharding)."""
+    axes = dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    chosen: list[str] = []
+    prod = 1
+    for a in axes:
+        if batch % (prod * sizes[a]) == 0:
+            chosen.append(a)
+            prod *= sizes[a]
+    return tuple(chosen) if chosen else None
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs only — never allocates)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model-input stand-ins for one shape cell (tokens/labels/patches)."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        text = s - cfg.vlm_patches if cfg.frontend == "vlm" else s
+        out = {
+            "tokens": sds((b, text), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+        if cfg.frontend == "vlm":
+            out["patch_embeds"] = sds((b, cfg.vlm_patches, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        text = s - cfg.vlm_patches if cfg.frontend == "vlm" else s
+        out = {"tokens": sds((b, text), jnp.int32)}
+        if cfg.frontend == "vlm":
+            out["patch_embeds"] = sds((b, cfg.vlm_patches, cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sds((b,), jnp.int32)}
+
+
+def _shape_struct(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# lowering targets
+# ---------------------------------------------------------------------------
+
+def build_lowered(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                  save_names: tuple[str, ...] = ()):
+    from ..sharding.context import set_mesh
+
+    set_mesh(mesh)  # layers needing explicit collectives (shard_map MoE, SP)
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_shape = jax.eval_shape(functools.partial(init_params, cfg), key_sds)
+    pspec = param_specs(cfg, params_shape, mesh)
+    dp = 1
+    for a in dp_axes(mesh):
+        dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    ins = input_specs(cfg, shape)
+    bdp = _dp_for_batch(shape.global_batch, mesh)
+
+    if shape.kind == "train":
+        state_shape = jax.eval_shape(
+            functools.partial(init_train_state, cfg), params_shape
+        )
+        sspec = train_state_specs(cfg, params_shape, mesh)
+        bspec = {k: P(bdp, *([None] * (len(v.shape) - 1))) for k, v in ins.items()}
+        step = make_train_step(
+            cfg, dp=dp, global_rows=shape.global_batch, save_names=save_names
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(_ns(mesh, sspec), _ns(mesh, bspec)),
+            out_shardings=(_ns(mesh, sspec), None),
+            donate_argnums=(0,),
+        )
+        return jitted.lower(_shape_struct(state_shape), ins)
+
+    cache_shape = jax.eval_shape(
+        lambda: make_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    cspec = cache_specs(cfg, cache_shape, mesh)
+    # batch dim of cache entries is dim 1 (after the group dim)
+    def fix_batch(spec):
+        entries = list(tuple(spec))
+        entries[1] = bdp
+        return P(*entries)
+
+    cspec = jax.tree.map(fix_batch, cspec, is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        bspec = {k: P(bdp, *([None] * (len(v.shape) - 1))) for k, v in ins.items()}
+        args = (_shape_struct(params_shape), ins["tokens"], _shape_struct(cache_shape))
+        in_sh = (_ns(mesh, pspec), NamedSharding(mesh, bspec["tokens"]),
+                 _ns(mesh, cspec))
+        kwargs = {}
+        if cfg.frontend == "vlm":
+            fn2 = lambda p, t, c, pe: fn(p, t, c, patch_embeds=pe)
+            args = args + (ins["patch_embeds"],)
+            in_sh = in_sh + (NamedSharding(mesh, bspec["patch_embeds"]),)
+        else:
+            fn2 = fn
+        jitted = jax.jit(
+            fn2,
+            in_shardings=in_sh,
+            out_shardings=(NamedSharding(mesh, P(bdp, "model")), _ns(mesh, cspec)),
+            donate_argnums=(2,),
+        )
+        return jitted.lower(*args, **kwargs)
+
+    # decode
+    fn = make_decode_step(cfg)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(
+            _ns(mesh, pspec),
+            NamedSharding(mesh, P(bdp)),
+            _ns(mesh, cspec),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(NamedSharding(mesh, P(bdp, "model")), _ns(mesh, cspec)),
+        donate_argnums=(2,),
+    )
+    return jitted.lower(
+        _shape_struct(params_shape),
+        ins["tokens"],
+        _shape_struct(cache_shape),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective result-tensor bytes from post-SPMD HLO (per device)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, _, rhs = ls.partition("=")
+        m = re.match(r"\s*(\(?[\w\[\],\s{}/*#]+?\)?)\s+((?:\w|-)+)\(", rhs.strip())
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.rstrip("-start").rstrip("-done") if op.endswith(("-start", "-done")) else op
+        for c in _COLLECTIVES:
+            if base == c or op == c + "-start":
+                out[c] += _bytes_of_type(m.group(1))
+                out["count"] += 1
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+def _pick_unroll(n_groups: int, cap: int = 12) -> int:
+    """Largest divisor of n_groups ≤ cap (>1 when possible)."""
+    for u in range(min(cap, n_groups), 0, -1):
+        if n_groups % u == 0:
+            return u
+    return 1
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: Path = RESULTS_DIR, overrides: dict | None = None,
+             tag: str = "", cost_accurate: bool = False) -> dict:
+    cfg = get_config(arch)
+    if cost_accurate:
+        # XLA cost analysis counts while-loop bodies ONCE. Compiling with two
+        # unroll factors (U and 1, both with the microbatch loop removed)
+        # lets §Roofline recover exact totals by extrapolation:
+        #   body = (cost(U) - cost(1)) / (U - 1);  total = outer + G·body.
+        # Full unroll is infeasible on this host for 126-layer archs.
+        overrides = dict(overrides or {})
+        overrides.setdefault("scan_unroll", _pick_unroll(cfg.n_groups))
+        overrides.setdefault("microbatch_size", 1_000_000)
+        tag = tag or "cost"
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "kind": shape.kind,
+        "overrides": overrides or {}, "tag": tag,
+    }
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        record["skipped"] = (
+            "full-attention arch: 500k dense-attention decode is the "
+            "quadratic regime the task spec says to skip (DESIGN.md §5)"
+        )
+        _write(out_dir, record)
+        return record
+
+    mesh = make_production_mesh(multi_pod=mesh_kind == "multi")
+    t0 = time.perf_counter()
+    lowered = build_lowered(cfg, shape, mesh)
+    record["lower_seconds"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    record["compile_seconds"] = time.perf_counter() - t0
+
+    try:
+        ma = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+    except Exception as e:  # pragma: no cover
+        record["memory_analysis"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        record["cost_analysis"] = {
+            k: float(v)
+            for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" not in k
+            )
+        } if ca else {}
+    except Exception as e:  # pragma: no cover
+        record["cost_analysis"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    record["collectives"] = collective_bytes(hlo)
+    record["hlo_lines"] = hlo.count("\n")
+    record["n_params"] = cfg.param_count()
+    record["n_params_active"] = cfg.active_param_count()
+    if cost_accurate:
+        record["unroll"] = cfg.scan_unroll
+        record["n_groups"] = cfg.n_groups
+        if cfg.scan_unroll > 1:
+            # second extrapolation point: identical program, unroll=1
+            cfg1 = dataclasses.replace(cfg, scan_unroll=1)
+            lowered1 = build_lowered(cfg1, shape, mesh)
+            compiled1 = lowered1.compile()
+            ca1 = compiled1.cost_analysis() or {}
+            record["cost_lo"] = {
+                "flops": float(ca1.get("flops", 0.0)),
+                "bytes accessed": float(ca1.get("bytes accessed", 0.0)),
+                "collectives": collective_bytes(compiled1.as_text()),
+            }
+    _write(out_dir, record)
+    return record
+
+
+def _cell_path(out_dir: Path, record: dict) -> Path:
+    tag = f"__{record['tag']}" if record.get("tag") else ""
+    return out_dir / f"{record['arch']}__{record['shape']}__{record['mesh']}{tag}.json"
+
+
+def _write(out_dir: Path, record: dict) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    _cell_path(out_dir, record).write_text(json.dumps(record, indent=1))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true", help="every arch × shape")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--keep-going", action="store_true",
+                    help="record failures and continue the sweep")
+    ap.add_argument("--cost-accurate", action="store_true",
+                    help="unrolled pass for true flops/collective totals "
+                         "(tagged 'cost')")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration runs")
+    ap.add_argument(
+        "--override", action="append", default=[],
+        help="cfg field override, e.g. --override remat_policy=dots",
+    )
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        field_types = {f.name: f.type for f in dataclasses.fields(ModelConfig)}
+        cast = {"int": int, "float": float, "bool": lambda s: s == "True",
+                "str": str}.get(str(field_types.get(k, "str")), str)
+        try:
+            overrides[k] = cast(v)
+        except Exception:
+            overrides[k] = v
+
+    out_dir = Path(args.out)
+    meshes = ["single", "multi"] if args.both_meshes else [args.mesh]
+    if args.all:
+        cells = [
+            (a, s.name)
+            for a, cfg in all_configs().items()
+            for s in (SHAPES[n] for n in SHAPES)
+        ]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    for mesh_kind in meshes:
+        for arch, shape_name in cells:
+            tag = args.tag or ("cost" if args.cost_accurate else "")
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "tag": tag}
+            if args.skip_existing and _cell_path(out_dir, rec).exists():
+                print(f"[skip existing] {arch} {shape_name} {mesh_kind}")
+                continue
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_kind} "
+                  f"{'(cost) ' if args.cost_accurate else ''}...", flush=True)
+            t0 = time.perf_counter()
+            try:
+                r = run_cell(arch, shape_name, mesh_kind, out_dir, overrides,
+                             tag, cost_accurate=args.cost_accurate)
+                if "skipped" in r:
+                    print(f"  -> skipped: {r['skipped']}")
+                else:
+                    print(
+                        f"  -> ok in {time.perf_counter()-t0:.1f}s  "
+                        f"flops={r['cost_analysis'].get('flops', 0):.3e}  "
+                        f"coll={r['collectives']['total']:.3e}B"
+                    )
+            except Exception as e:
+                print(f"  -> FAILED: {type(e).__name__}: {e}")
+                if not args.keep_going:
+                    raise
+                rec["failed"] = f"{type(e).__name__}: {e}"
+                _write(out_dir, rec)
+
+
+if __name__ == "__main__":
+    main()

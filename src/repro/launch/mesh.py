@@ -1,0 +1,24 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): (16,16) ('data','model') per pod; (2,16,16) with a leading
+'pod' axis for the 512-chip two-pod dry-run.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over locally available devices (tests, examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def required_devices(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256

@@ -1,0 +1,24 @@
+"""Unified config-driven decoder LM (dense / GQA / MoE / SSD / hybrid / VLM / audio)."""
+from . import layers
+from .transformer import (
+    ACT_NAMES,
+    count_params_analytic,
+    decode_step,
+    forward,
+    init_params,
+    lm_loss,
+    make_cache,
+    prefill,
+)
+
+__all__ = [
+    "layers",
+    "forward",
+    "init_params",
+    "lm_loss",
+    "prefill",
+    "decode_step",
+    "make_cache",
+    "count_params_analytic",
+    "ACT_NAMES",
+]

@@ -1,0 +1,323 @@
+"""Unified decoder LM: init / forward / loss / prefill / decode.
+
+The block stack is ``cfg.pattern`` repeated ``cfg.n_groups`` times and executed
+with ``lax.scan`` over stacked group parameters — the lowered HLO contains one
+group body regardless of depth, which keeps 512-device dry-run compiles
+tractable. Heterogeneous archs (Jamba) unroll their 8-sub-layer superblock
+*inside* the scanned body.
+
+Remat policy is a config knob; the ``planner`` policy saves exactly the named
+intermediates chosen by the S/C activation planner (core/planner.py) —
+``checkpoint_name`` tags below are the planner's node set.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from . import layers as L
+
+MOE_AUX_COEF = 0.01
+
+# checkpoint_name tags usable by remat policies / the activation planner
+ACT_NAMES = ("mixer_out", "ffn_out", "block_out")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_group_params(cfg: ModelConfig, key) -> dict:
+    subs = {}
+    keys = jax.random.split(key, len(cfg.pattern))
+    dt = jnp.dtype(cfg.dtype)
+    for i, (mixer, mlp) in enumerate(cfg.pattern):
+        k_mix, k_ffn = jax.random.split(keys[i])
+        sub: dict = {"norm1": jnp.ones((cfg.d_model,), dt)}
+        sub["mixer"] = (
+            L.init_attention(cfg, k_mix) if mixer == "attn" else L.init_ssm(cfg, k_mix)
+        )
+        if mlp is not None:
+            sub["norm2"] = jnp.ones((cfg.d_model,), dt)
+            sub["ffn"] = (
+                L.init_moe(cfg, k_ffn) if mlp == "moe" else L.init_mlp(cfg, k_ffn)
+            )
+        subs[f"sub{i}"] = sub
+    return subs
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k_embed, k_blocks, k_head, k_adapter = jax.random.split(key, 4)
+    params: dict = {
+        "embed": (
+            jax.random.normal(k_embed, (cfg.vocab_padded, cfg.d_model), jnp.float32)
+            * (1.0 / math.sqrt(cfg.d_model))
+        ).astype(dt),
+        "blocks": jax.vmap(lambda k: init_group_params(cfg, k))(
+            jax.random.split(k_blocks, cfg.n_groups)
+        ),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab_padded), jnp.float32)
+            * (1.0 / math.sqrt(cfg.d_model))
+        ).astype(dt)
+    if cfg.frontend == "vlm":
+        params["patch_adapter"] = (
+            jax.random.normal(k_adapter, (cfg.d_model, cfg.d_model), jnp.float32)
+            * (1.0 / math.sqrt(cfg.d_model))
+        ).astype(dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block group
+# ---------------------------------------------------------------------------
+
+def _group_forward(cfg: ModelConfig, gparams: dict, x, positions, gcache,
+                   cache_pos):
+    """One scanned group: runs every sub-layer in cfg.pattern."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    for i, (mixer, mlp) in enumerate(cfg.pattern):
+        sub = gparams[f"sub{i}"]
+        h = ops.rmsnorm(x, sub["norm1"], eps=cfg.norm_eps)
+        centry = gcache.get(f"sub{i}") if gcache is not None else None
+        if mixer == "attn":
+            y, c = L.attention_forward(
+                cfg, sub["mixer"], h, positions,
+                cache=centry, cache_pos=cache_pos,
+            )
+        else:
+            y, c = L.ssm_forward(cfg, sub["mixer"], h, cache=centry)
+        if gcache is not None:
+            new_cache[f"sub{i}"] = c
+        y = checkpoint_name(y, "mixer_out")
+        x = x + y
+        if mlp is not None:
+            h2 = ops.rmsnorm(x, sub["norm2"], eps=cfg.norm_eps)
+            if mlp == "moe":
+                f, a = L.moe_forward(cfg, sub["ffn"], h2, cfg.mlp_kind)
+                aux = aux + a
+            else:
+                f = L.mlp_forward(cfg.mlp_kind, sub["ffn"], h2)
+            f = checkpoint_name(f, "ffn_out")
+            x = x + f
+    x = checkpoint_name(x, "block_out")
+    if cfg.seq_shard_activations and gcache is None:
+        x = _seq_shard(x)
+    return x, aux, (new_cache if gcache is not None else None)
+
+
+def _seq_shard(x):
+    """§Perf: sequence-parallel residual stream — shard (b,s,d) over 'model'
+    between blocks so the scan carry (the dominant saved activation at 405B
+    scale) is 16x smaller per device. GSPMD re-gathers k/v inside attention."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..sharding.context import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if x.shape[1] % sizes["model"] != 0:
+        return x
+    dp_axes = []
+    prod = 1
+    for a in mesh.axis_names:
+        if a == "model":
+            continue
+        if x.shape[0] % (prod * sizes[a]) == 0:
+            dp_axes.append(a)
+            prod *= sizes[a]
+    bdp = tuple(dp_axes) if dp_axes else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bdp, "model", None))
+    )
+
+
+def _remat_wrap(cfg: ModelConfig, fn, save_names: tuple[str, ...] = ()):
+    policy = None
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    elif cfg.remat_policy == "planner":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            *(save_names or ACT_NAMES)
+        )
+    # "block": full remat (policy=None saves only inputs)
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params: dict, tokens, patch_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vlm" and patch_embeds is not None:
+        # prompt/prefill: prepend projected patch embeddings; decode steps
+        # carry no patches (they already live in the cache)
+        patches = patch_embeds.astype(x.dtype) @ params["patch_adapter"]
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,               # (b, s)
+    patch_embeds: jax.Array | None = None,
+    cache: dict | None = None,       # stacked (G, ...) per sub-layer
+    cache_pos: jax.Array | None = None,
+    save_names: tuple[str, ...] = (),
+):
+    """Returns (logits, moe_aux, new_cache)."""
+    x = embed_inputs(cfg, params, tokens, patch_embeds)
+    b, s, _ = x.shape
+    if cache_pos is None:
+        positions = jnp.arange(s)
+        cpos = None
+    else:
+        positions = cache_pos + jnp.arange(s)
+        cpos = cache_pos
+
+    group_fn = functools.partial(_group_forward, cfg)
+
+    if cache is None:
+        def body(carry, gparams):
+            x, aux = carry
+            x, a, _ = group_fn(gparams, x, positions, None, cpos)
+            return (x, aux + a), None
+
+        body = _remat_wrap(cfg, body, save_names)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"],
+                                   unroll=min(cfg.scan_unroll, cfg.n_groups))
+        new_cache = None
+    else:
+        def body(carry, scanned):
+            x, aux = carry
+            gparams, gcache = scanned
+            x, a, gc = group_fn(gparams, x, positions, gcache, cpos)
+            return (x, aux + a), gc
+
+        (x, aux), new_cache = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], cache),
+            unroll=min(cfg.scan_unroll, cfg.n_groups),
+        )
+
+    x = ops.rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e9)
+    return logits, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params: dict, batch: dict,
+            save_names: tuple[str, ...] = ()) -> tuple[jax.Array, dict]:
+    logits, aux, _ = forward(
+        cfg, params, batch["tokens"], patch_embeds=batch.get("patch_embeds"),
+        save_names=save_names,
+    )
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * mask
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / ntok
+    zloss = 1e-4 * jnp.sum((logz * mask) ** 2) / ntok
+    total = loss + zloss + MOE_AUX_COEF * aux / max(cfg.n_layers, 1)
+    return total, {"nll": loss, "zloss": zloss, "moe_aux": aux, "ntok": ntok}
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Stacked (G, ...) decode cache matching the scan layout."""
+    def one_group(_):
+        g: dict = {}
+        for i, (mixer, _) in enumerate(cfg.pattern):
+            if mixer == "attn":
+                g[f"sub{i}"] = L.make_kv_cache(cfg, batch, max_len)
+            else:
+                g[f"sub{i}"] = L.make_ssm_cache(cfg, batch)
+        return g
+
+    sample = one_group(None)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_groups,) + a.shape).copy(), sample
+    )
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, cache, patch_embeds=None):
+    """Consume a prompt, fill the cache, return last-position logits."""
+    logits, _, new_cache = forward(
+        cfg, params, tokens, patch_embeds=patch_embeds, cache=cache,
+        cache_pos=jnp.zeros((), jnp.int32),
+    )
+    return logits[:, -1], new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens, cache, cache_pos):
+    """One token step. tokens: (b,); cache_pos: scalar position."""
+    logits, _, new_cache = forward(
+        cfg, params, tokens[:, None], cache=cache, cache_pos=cache_pos
+    )
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, hd = cfg.d_model, cfg.head_dim_
+    hp, kv = cfg.n_heads_padded, cfg.n_kv_heads
+    total = cfg.vocab_padded * d  # embed
+    if not cfg.tie_embeddings:
+        total += d * cfg.vocab_padded
+    if cfg.frontend == "vlm":
+        total += d * d
+
+    per_pattern = 0
+    for mixer, mlp in cfg.pattern:
+        per_pattern += d  # norm1
+        if mixer == "attn":
+            per_pattern += d * hp * hd + 2 * d * kv * hd + hp * hd * d
+        else:
+            di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+            per_pattern += d * (2 * di + 2 * n + h)              # w_z/x/bc/dt
+            per_pattern += cfg.ssm_conv_kernel * (di + 2 * n) + (di + 2 * n)
+            per_pattern += 3 * h + di + di * d                   # a/D/dt_b, norm, out
+        if mlp is not None:
+            per_pattern += d  # norm2
+            if mlp == "moe":
+                e = cfg.moe_top_k if active_only else cfg.moe_experts
+                per_pattern += d * cfg.moe_experts  # router (always dense)
+                per_pattern += e * 3 * d * cfg.moe_d_ff
+                if cfg.moe_shared_experts:
+                    per_pattern += 3 * d * cfg.moe_shared_experts * cfg.moe_d_ff
+                if cfg.moe_dense_residual:
+                    per_pattern += 3 * d * cfg.d_ff
+            else:
+                per_pattern += 3 * d * cfg.d_ff
+    total += cfg.n_groups * per_pattern + d  # final norm
+    return int(total)

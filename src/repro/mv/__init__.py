@@ -1,0 +1,35 @@
+"""S/C materialization engine: Memory Catalog, storage, Controller, simulator."""
+from .catalog import CatalogOverflowError, MemoryCatalog
+from .executor import Controller, InjectedCrash, RunReport, calibrate_sizes
+from .simulator import SimReport, simulate, speedup
+from .storage import DiskStore, table_nbytes
+from .workloads import (
+    MVNode,
+    PAPER_WORKLOAD_SPECS,
+    TPCDS_100GB_TABLES,
+    Workload,
+    generate_workload,
+    paper_workloads,
+    realize_workload,
+)
+
+__all__ = [
+    "MemoryCatalog",
+    "CatalogOverflowError",
+    "DiskStore",
+    "table_nbytes",
+    "Controller",
+    "RunReport",
+    "InjectedCrash",
+    "calibrate_sizes",
+    "simulate",
+    "speedup",
+    "SimReport",
+    "Workload",
+    "MVNode",
+    "generate_workload",
+    "paper_workloads",
+    "realize_workload",
+    "PAPER_WORKLOAD_SPECS",
+    "TPCDS_100GB_TABLES",
+]

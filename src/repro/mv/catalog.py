@@ -1,0 +1,74 @@
+"""Memory Catalog (paper §III-C): bounded in-memory store for flagged nodes.
+
+Semantics follow the paper exactly: a flagged node's output is *created in*
+the catalog, stays resident while any of its children is yet to execute, and
+is released as soon as the last child has completed. Accounting is byte-exact
+against the configured budget; exceeding it raises (the optimizer guarantees
+feasible plans, so a raise here is a scheduling bug, not an eviction policy).
+
+Thread-safe: the Controller's main loop and the background materializer touch
+the catalog concurrently.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+
+class CatalogOverflowError(RuntimeError):
+    pass
+
+
+class MemoryCatalog:
+    def __init__(self, budget_bytes: float):
+        self.budget = float(budget_bytes)
+        self._entries: dict[str, tuple[Any, float]] = {}
+        self._used = 0.0
+        self._peak = 0.0
+        self._lock = threading.Lock()
+
+    # -- capacity -----------------------------------------------------------
+    @property
+    def used_bytes(self) -> float:
+        return self._used
+
+    @property
+    def peak_bytes(self) -> float:
+        return self._peak
+
+    def fits(self, size: float) -> bool:
+        with self._lock:
+            return self._used + size <= self.budget + 1e-9
+
+    # -- operations ----------------------------------------------------------
+    def put(self, name: str, value: Any, size: float) -> None:
+        with self._lock:
+            if name in self._entries:
+                raise KeyError(f"{name} already in catalog")
+            if self._used + size > self.budget + 1e-9:
+                raise CatalogOverflowError(
+                    f"putting {name} ({size:.0f}B) exceeds budget "
+                    f"({self._used:.0f}/{self.budget:.0f}B used)"
+                )
+            self._entries[name] = (value, size)
+            self._used += size
+            self._peak = max(self._peak, self._used)
+
+    def get(self, name: str) -> Any:
+        with self._lock:
+            return self._entries[name][0]
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._entries
+
+    def release(self, name: str) -> None:
+        with self._lock:
+            if name in self._entries:
+                _, size = self._entries.pop(name)
+                self._used -= size
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._used = 0.0

@@ -1,0 +1,123 @@
+"""External storage for materialized tables (paper: NFS via Hive/Parquet).
+
+``DiskStore`` persists tables (dicts of numpy arrays) as ``.npz`` files with
+atomic rename, an fsync'd manifest of completed materializations (the
+restart/crash-recovery source of truth), and an optional bandwidth throttle so
+laptop-scale experiments can reproduce the paper's NFS read/write bandwidths
+(519.8 / 358.9 MB/s) or any slower tier.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Mapping
+
+import numpy as np
+
+Table = Mapping[str, np.ndarray]
+
+
+def table_nbytes(table: Table) -> int:
+    return int(sum(np.asarray(v).nbytes for v in table.values()))
+
+
+class DiskStore:
+    def __init__(
+        self,
+        root: str | os.PathLike,
+        read_bw: float | None = None,
+        write_bw: float | None = None,
+        latency: float = 0.0,
+    ):
+        """read_bw/write_bw in bytes/sec add throttling sleeps (None = full
+        native speed); latency is the per-read seek penalty (paper: 175 µs)."""
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.read_bw = read_bw
+        self.write_bw = write_bw
+        self.latency = latency
+        self._manifest_path = self.root / "MANIFEST.json"
+        self._manifest_lock = threading.Lock()
+        self.read_seconds = 0.0  # cumulative blocking read time (Table IV)
+        self.write_seconds = 0.0
+        self._io_lock = threading.Lock()
+
+    # -- paths ----------------------------------------------------------------
+    def _path(self, name: str) -> Path:
+        return self.root / f"{name}.npz"
+
+    def exists(self, name: str) -> bool:
+        return name in self.manifest()
+
+    # -- manifest (crash-consistent completion record) -------------------------
+    def manifest(self) -> dict[str, int]:
+        if not self._manifest_path.exists():
+            return {}
+        return json.loads(self._manifest_path.read_text())
+
+    def _record(self, name: str, nbytes: int) -> None:
+        with self._manifest_lock:
+            m = self.manifest()
+            m[name] = nbytes
+            tmp = self._manifest_path.with_suffix(".tmp")
+            tmp.write_text(json.dumps(m))
+            os.replace(tmp, self._manifest_path)
+
+    # -- IO --------------------------------------------------------------------
+    def write(self, name: str, table: Table) -> float:
+        """Persist table; returns elapsed seconds. Atomic: tmp + rename, then
+        the manifest records completion (a crash mid-write leaves no entry)."""
+        t0 = time.perf_counter()
+        buf = io.BytesIO()
+        np.savez(buf, **{k: np.asarray(v) for k, v in table.items()})
+        data = buf.getvalue()
+        tmp = self._path(name).with_suffix(".npz.tmp")
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._path(name))
+        if self.write_bw:
+            residual = len(data) / self.write_bw - (time.perf_counter() - t0)
+            if residual > 0:
+                time.sleep(residual)
+        dt = time.perf_counter() - t0
+        with self._io_lock:
+            self.write_seconds += dt
+        self._record(name, table_nbytes(table))
+        return dt
+
+    def read(self, name: str) -> dict[str, np.ndarray]:
+        t0 = time.perf_counter()
+        if self.latency:
+            time.sleep(self.latency)
+        with np.load(self._path(name)) as z:
+            out = {k: z[k] for k in z.files}
+        if self.read_bw:
+            residual = table_nbytes(out) / self.read_bw - (
+                time.perf_counter() - t0
+            )
+            if residual > 0:
+                time.sleep(residual)
+        dt = time.perf_counter() - t0
+        with self._io_lock:
+            self.read_seconds += dt
+        return out
+
+    def delete(self, name: str) -> None:
+        self._path(name).unlink(missing_ok=True)
+        with self._manifest_lock:
+            m = self.manifest()
+            if name in m:
+                del m[name]
+                tmp = self._manifest_path.with_suffix(".tmp")
+                tmp.write_text(json.dumps(m))
+                os.replace(tmp, self._manifest_path)
+
+    def reset_counters(self) -> None:
+        self.read_seconds = 0.0
+        self.write_seconds = 0.0

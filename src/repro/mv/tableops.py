@@ -1,0 +1,119 @@
+"""Columnar table operators — the SPJ units S/C schedules (paper §VI-A).
+
+A *table* is a dict of equal-length 1-D arrays. Operators mirror the
+select-project-join units the paper carves out of TPC-DS queries: SCAN,
+FILTER, PROJECT, JOIN (equi), AGG (group-by sum/count). Arithmetic runs
+through JAX (jitted element-wise/segment kernels); data-dependent compaction
+(filter/join output sizes) happens on host, as it would in any vectorized
+engine.
+
+These run the *real-execution* experiments: the Controller materializes their
+outputs through the DiskStore / MemoryCatalog, and results must be bitwise
+identical between serial and short-circuit runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Table = dict[str, np.ndarray]
+
+
+def make_base_table(n_rows: int, n_cols: int, seed: int, key_mod: int | None = None) -> Table:
+    rng = np.random.default_rng(seed)
+    t: Table = {"key": rng.integers(0, key_mod or max(n_rows // 4, 4), n_rows).astype(np.int64)}
+    for c in range(n_cols - 1):
+        t[f"c{c}"] = rng.standard_normal(n_rows).astype(np.float32)
+    return t
+
+
+@partial(jax.jit, static_argnames=("threshold_col",))
+def _filter_mask(col: jnp.ndarray, threshold: float, threshold_col: str = "") -> jnp.ndarray:
+    return col > threshold
+
+
+def op_filter(table: Table, col: str = "c0", threshold: float = 0.0) -> Table:
+    if col not in table:
+        col = next(k for k in table if k != "key")
+    mask = np.asarray(_filter_mask(jnp.asarray(table[col]), threshold))
+    idx = np.nonzero(mask)[0]
+    return {k: np.asarray(v)[idx] for k, v in table.items()}
+
+
+def op_project(table: Table, keep_frac: float = 0.5) -> Table:
+    cols = list(table)
+    keep = max(1, int(round(len(cols) * keep_frac)))
+    kept = cols[:keep]
+    if "key" in table and "key" not in kept:
+        kept = ["key"] + kept[: keep - 1]
+    return {k: table[k] for k in kept}
+
+
+@jax.jit
+def _add_derived(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a * 1.0001 + jnp.tanh(b)
+
+
+def op_map(table: Table) -> Table:
+    """Element-wise derived column (models expression evaluation)."""
+    out = dict(table)
+    vals = [v for k, v in table.items() if k != "key"]
+    if len(vals) >= 2:
+        out["derived"] = np.asarray(
+            _add_derived(jnp.asarray(vals[0]), jnp.asarray(vals[1]))
+        )
+    elif vals:
+        out["derived"] = np.asarray(jnp.tanh(jnp.asarray(vals[0])))
+    return out
+
+
+def op_join(left: Table, right: Table) -> Table:
+    """Inner equi-join on 'key' (sort-merge, host index building + JAX gather)."""
+    lk, rk = np.asarray(left["key"]), np.asarray(right["key"])
+    # build right index: first occurrence per key (PK-style join)
+    order = np.argsort(rk, kind="stable")
+    rk_sorted = rk[order]
+    uniq, first = np.unique(rk_sorted, return_index=True)
+    ridx_for = order[first]
+    pos = np.searchsorted(uniq, lk)
+    pos = np.clip(pos, 0, len(uniq) - 1)
+    matched = uniq[pos] == lk if len(uniq) else np.zeros(len(lk), bool)
+    li = np.nonzero(matched)[0]
+    ri = ridx_for[pos[matched]] if len(uniq) else np.array([], np.int64)
+    out: Table = {}
+    for k, v in left.items():
+        out[k] = np.asarray(v)[li]
+    for k, v in right.items():
+        if k == "key":
+            continue
+        out[f"r_{k}"] = np.asarray(v)[ri]
+    return out
+
+
+def op_agg(table: Table) -> Table:
+    """Group-by key, sum numeric columns (JAX segment_sum)."""
+    keys = np.asarray(table["key"])
+    uniq, inv = np.unique(keys, return_inverse=True)
+    n = len(uniq)
+    out: Table = {"key": uniq}
+    inv_j = jnp.asarray(inv)
+    for k, v in table.items():
+        if k == "key":
+            continue
+        v = np.asarray(v)
+        if np.issubdtype(v.dtype, np.number):
+            out[f"sum_{k}"] = np.asarray(
+                jax.ops.segment_sum(jnp.asarray(v, jnp.float32), inv_j, num_segments=n)
+            )
+    out["count"] = np.asarray(
+        jax.ops.segment_sum(jnp.ones(len(keys), jnp.int32), inv_j, num_segments=n)
+    )
+    return out
+
+
+def op_union(left: Table, right: Table) -> Table:
+    common = [k for k in left if k in right]
+    return {k: np.concatenate([np.asarray(left[k]), np.asarray(right[k])]) for k in common}

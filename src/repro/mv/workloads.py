@@ -1,0 +1,423 @@
+"""MV refresh workloads (paper §VI-A): the five TPC-DS-derived workloads and
+the §VI-H synthetic workload generator (layered DAG + Markov-chain ops).
+
+A ``Workload`` couples an ``MVGraph`` (sizes + speedup scores, what S/C Opt
+consumes) with per-node operator metadata and compute-time estimates (what the
+executor/simulator consume). Real TPC-DS data is not available offline; the
+five workloads reproduce Table III structurally — same node counts, DAG shapes
+built from scan→filter→join→agg SPJ trees over the TPC-DS table-size
+distribution, and compute times calibrated to the published I/O ratios
+(51.5 / 59.0 / 46.6 / 0.9 / 28.3 %).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, Sequence
+
+from ..core.graph import MVGraph
+from ..core.speedup import EFFECTIVE_NFS_COST_MODEL, PAPER_COST_MODEL, CostModel
+
+# TPC-DS base table sizes at scale factor 100 (bytes, approximate on-disk).
+TPCDS_100GB_TABLES: dict[str, float] = {
+    "store_sales": 38.0e9,
+    "catalog_sales": 28.5e9,
+    "web_sales": 14.6e9,
+    "inventory": 7.9e9,
+    "store_returns": 3.4e9,
+    "catalog_returns": 2.6e9,
+    "web_returns": 1.3e9,
+    "customer": 0.26e9,
+    "customer_address": 0.12e9,
+    "customer_demographics": 0.08e9,
+    "item": 0.06e9,
+    "date_dim": 0.010e9,
+    "time_dim": 0.009e9,
+    "promotion": 0.002e9,
+    "store": 0.001e9,
+}
+# The three tables TPC-DSp partitions by year (paper: join with date_dim).
+PARTITIONED_TABLES = ("store_sales", "catalog_sales", "web_sales")
+PARTITION_FACTOR = 5.0  # ~5 years of data per partition
+
+OPS = ("SCAN", "FILTER", "PROJECT", "MAP", "JOIN", "AGG", "UNION")
+
+# bytes/sec of pure compute per operator on the modeled engine
+OP_THROUGHPUT: dict[str, float] = {
+    "SCAN": 3.0e9,
+    "FILTER": 2.0e9,
+    "PROJECT": 4.0e9,
+    "MAP": 1.5e9,
+    "JOIN": 0.6e9,
+    "AGG": 0.8e9,
+    "UNION": 3.0e9,
+}
+
+# output-size multiplier ranges per operator (fraction of total input bytes).
+# SCAN is a *filtered/projected* scan of a base table — the first SPJ unit a
+# TPC-DS query materializes is far smaller than the base table it reads.
+# Ranges are sampled LOG-uniformly (real SPJ-unit outputs skew small: most
+# intermediates are 100s of MB at SF100, a few reach GBs).
+OP_SELECTIVITY: dict[str, tuple[float, float]] = {
+    "SCAN": (0.02, 0.25),
+    "FILTER": (0.50, 1.10),
+    "PROJECT": (0.55, 1.00),
+    "MAP": (1.00, 1.40),
+    "JOIN": (0.70, 1.80),
+    "AGG": (0.05, 0.50),
+    "UNION": (1.0, 1.0),
+}
+
+
+def _sel(rng: random.Random, op: str) -> float:
+    lo, hi = OP_SELECTIVITY[op]
+    return math.exp(rng.uniform(math.log(lo), math.log(hi)))
+
+# Materialized intermediates are Parquet (paper §VI-A) and base tables ORC —
+# both columnar-compressed. Sizes below are *on-disk/in-catalog* bytes;
+# compute cost is keyed to the logical (uncompressed) volume.
+COMPRESSION = 0.30
+
+# Markov transition over op kinds (paper: trained on TPC-DS + Spider; the
+# matrix below encodes the same qualitative structure: scans feed filters and
+# joins, joins feed aggregations).
+MARKOV: dict[str, Sequence[tuple[str, float]]] = {
+    "SCAN": (("FILTER", 0.45), ("JOIN", 0.30), ("PROJECT", 0.15), ("AGG", 0.10)),
+    "FILTER": (("JOIN", 0.40), ("AGG", 0.25), ("PROJECT", 0.20), ("FILTER", 0.15)),
+    "PROJECT": (("JOIN", 0.35), ("AGG", 0.30), ("FILTER", 0.20), ("PROJECT", 0.15)),
+    "MAP": (("JOIN", 0.35), ("AGG", 0.30), ("FILTER", 0.20), ("PROJECT", 0.15)),
+    "JOIN": (("AGG", 0.35), ("FILTER", 0.25), ("JOIN", 0.25), ("PROJECT", 0.15)),
+    "AGG": (("JOIN", 0.30), ("FILTER", 0.25), ("PROJECT", 0.25), ("AGG", 0.20)),
+    "UNION": (("AGG", 0.50), ("FILTER", 0.30), ("PROJECT", 0.20)),
+}
+
+
+@dataclasses.dataclass
+class MVNode:
+    name: str
+    parents: tuple[int, ...]
+    op: str
+    size: float            # output bytes
+    compute: float         # pure compute seconds (simulator)
+    fn: Callable | None = None  # real compute fn(inputs) -> Table
+    base_read: float = 0.0  # bytes scanned from base tables (SCAN nodes);
+    # base tables are never in the Memory Catalog, so this cost is identical
+    # under every method — it is what partitioning (TPC-DSp) shrinks.
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    nodes: list[MVNode]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return len(self.nodes)
+
+    def edges(self) -> tuple[tuple[int, int], ...]:
+        return tuple(
+            (p, i) for i, node in enumerate(self.nodes) for p in node.parents
+        )
+
+    def to_graph(self, cost_model: CostModel = PAPER_COST_MODEL) -> MVGraph:
+        from ..core.speedup import score_graph
+
+        return score_graph(
+            self.n,
+            self.edges(),
+            [n.size for n in self.nodes],
+            cost_model,
+            names=[n.name for n in self.nodes],
+        )
+
+    def serial_time(self, cost_model: CostModel = PAPER_COST_MODEL) -> float:
+        """End-to-end time of the unoptimized serial run (everything via disk)."""
+        total = 0.0
+        for node in self.nodes:
+            for p in node.parents:
+                total += cost_model.read_disk(self.nodes[p].size)
+            if node.base_read:
+                total += cost_model.read_base(node.base_read)
+            total += node.compute + cost_model.write_disk(node.size)
+        return total
+
+    def io_ratio(self, cost_model: CostModel = PAPER_COST_MODEL) -> float:
+        serial = self.serial_time(cost_model)
+        compute = sum(n.compute for n in self.nodes)
+        return (serial - compute) / serial if serial else 0.0
+
+
+# ---------------------------------------------------------------------------
+# §VI-H synthetic workload generator
+# ---------------------------------------------------------------------------
+
+def generate_workload(
+    n_nodes: int,
+    hw_ratio: float = 1.0,
+    max_outdegree: int = 4,
+    stage_stdev: float = 1.0,
+    seed: int = 0,
+    table_sizes: Sequence[float] | None = None,
+    name: str | None = None,
+) -> Workload:
+    """Layered DAG (Spark-stage-like) + Markov-chain operator assignment.
+
+    height/width = hw_ratio with height*width ≈ n_nodes; per-stage node count
+    jitters with ``stage_stdev``; each node draws outdegree U[0, max_outdegree]
+    toward later stages (biased to the next stage).
+    """
+    rng = random.Random(seed)
+    sizes_pool = list(table_sizes or TPCDS_100GB_TABLES.values())
+
+    width = max(1, int(round(math.sqrt(n_nodes / max(hw_ratio, 1e-6)))))
+    height = max(1, int(round(n_nodes / width)))
+    stage_counts = []
+    remaining = n_nodes
+    for s in range(height):
+        if s == height - 1:
+            c = remaining
+        else:
+            c = max(1, int(round(rng.gauss(width, stage_stdev))))
+            c = min(c, remaining - (height - 1 - s))
+        stage_counts.append(c)
+        remaining -= c
+        if remaining <= 0:
+            break
+    stages: list[list[int]] = []
+    idx = 0
+    for c in stage_counts:
+        stages.append(list(range(idx, idx + c)))
+        idx += c
+    n = idx
+
+    parents: list[list[int]] = [[] for _ in range(n)]
+    for s, stage in enumerate(stages[:-1]):
+        later = [v for st in stages[s + 1 :] for v in st]
+        nxt = stages[s + 1]
+        for v in stage:
+            out = rng.randint(0, max_outdegree)
+            for _ in range(out):
+                child = rng.choice(nxt) if rng.random() < 0.8 else rng.choice(later)
+                if v not in parents[child]:
+                    parents[child].append(v)
+    # every non-first-stage node needs ≥1 parent
+    for s in range(1, len(stages)):
+        prev = stages[s - 1]
+        for v in stages[s]:
+            if not parents[v]:
+                parents[v].append(rng.choice(prev))
+
+    nodes: list[MVNode] = []
+    ops: list[str] = []
+    sizes: list[float] = []
+    for v in range(n):
+        ps = tuple(sorted(parents[v]))
+        base_read = 0.0
+        if not ps:
+            op = "SCAN"
+            # TPC-DS reporting queries overwhelmingly scan the sales fact
+            # tables; dimension scans are the minority.
+            facts = sorted(sizes_pool, reverse=True)[:3]
+            pool = facts if rng.random() < 0.6 else sizes_pool
+            base_read = rng.choice(pool) * COMPRESSION  # ORC on disk
+            size = base_read * _sel(rng, op)
+        else:
+            if len(ps) >= 2:
+                op = "JOIN" if rng.random() < 0.8 else "UNION"
+            else:
+                parent_op = ops[ps[0]]
+                r, acc = rng.random(), 0.0
+                op = MARKOV[parent_op][-1][0]
+                for cand, p in MARKOV[parent_op]:
+                    acc += p
+                    if r <= acc:
+                        op = cand
+                        break
+            in_bytes = sum(sizes[p] for p in ps)
+            size = max(1e6, in_bytes * _sel(rng, op))
+        in_bytes = sum(sizes[p] for p in ps) if ps else base_read
+        compute = in_bytes / OP_THROUGHPUT[op]
+        ops.append(op)
+        sizes.append(size)
+        nodes.append(
+            MVNode(name=f"mv{v}", parents=ps, op=op, size=size, compute=compute,
+                   base_read=base_read)
+        )
+    return Workload(
+        name=name or f"gen{n}_seed{seed}",
+        nodes=nodes,
+        meta=dict(
+            n_nodes=n,
+            hw_ratio=hw_ratio,
+            max_outdegree=max_outdegree,
+            stage_stdev=stage_stdev,
+            seed=seed,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The five paper workloads (Table III)
+# ---------------------------------------------------------------------------
+
+# (name, tpcds queries, node count, target I/O ratio)
+PAPER_WORKLOAD_SPECS = (
+    ("io1", (5, 77, 80), 21, 0.515),
+    ("io2", (2, 59, 74, 75), 19, 0.590),
+    ("io3", (44, 49), 26, 0.466),
+    ("compute1", (33, 56, 60, 61), 21, 0.009),
+    ("compute2", (14, 23), 16, 0.283),
+)
+
+
+IO_RATIO_FLOOR = 0.15  # Table III's Polars-profiled ratios understate real
+# warehouse I/O (the paper itself measures 37-69% / 85% in Presto, §II-C);
+# calibrating compute1 at a literal 0.9% would give it a 12h serial runtime.
+
+
+def _calibrate_compute(workload: Workload, target_io_ratio: float,
+                       cost_model: CostModel = PAPER_COST_MODEL) -> None:
+    """Scale per-node compute so the serial-run I/O fraction hits the paper's
+    Table III value (compute = io_total·(1-ρ)/ρ, spread ∝ input bytes)."""
+    io_total = 0.0
+    for node in workload.nodes:
+        for p in node.parents:
+            io_total += cost_model.read_disk(workload.nodes[p].size)
+        if node.base_read:
+            io_total += cost_model.read_base(node.base_read)
+        io_total += cost_model.write_disk(node.size)
+    rho = min(max(target_io_ratio, IO_RATIO_FLOOR), 0.999)
+    compute_total = io_total * (1.0 - rho) / rho
+    weights = [
+        (sum(workload.nodes[p].size for p in node.parents) + node.base_read)
+        or node.size
+        for node in workload.nodes
+    ]
+    wsum = sum(weights) or 1.0
+    for node, w in zip(workload.nodes, weights):
+        node.compute = compute_total * w / wsum
+
+
+# Table V anchor: the five workloads' aggregate no-opt wall time at 100GB on
+# one worker was 1528s. Per-workload Table III ratios fix *relative* compute;
+# this anchor fixes the global compute scale (their Polars-profiled ratios are
+# CPU-based and understate NFS wall-clock I/O waits — Table IV shows CPU time
+# barely moving while wall time drops ~4x).
+TABLE5_ANCHOR_S = 1528.0
+
+
+def paper_workloads(
+    scale_gb: float = 100.0,
+    partitioned: bool = False,
+    cost_model: CostModel = EFFECTIVE_NFS_COST_MODEL,
+    anchor_total_s: float | None = TABLE5_ANCHOR_S,
+) -> list[Workload]:
+    """The five Table-III workloads at a given TPC-DS scale factor."""
+    scale = scale_gb / 100.0
+    out = []
+    for wi, (name, queries, n_nodes, io_ratio) in enumerate(PAPER_WORKLOAD_SPECS):
+        table_sizes = []
+        for tname, tbytes in TPCDS_100GB_TABLES.items():
+            b = tbytes * scale
+            if partitioned and tname in PARTITIONED_TABLES:
+                b /= PARTITION_FACTOR
+            table_sizes.append(b)
+        w = generate_workload(
+            n_nodes,
+            hw_ratio=1.6,
+            max_outdegree=3,
+            stage_stdev=1.0,
+            seed=1000 + wi,
+            table_sizes=table_sizes,
+            name=f"{name}{'p' if partitioned else ''}@{scale_gb:g}GB",
+        )
+        _calibrate_compute(w, io_ratio, cost_model)
+        w.meta.update(queries=queries, target_io_ratio=io_ratio, scale_gb=scale_gb,
+                      partitioned=partitioned)
+        out.append(w)
+    if anchor_total_s is not None and not partitioned:
+        # rescale compute so the aggregate no-opt wall matches Table V (scaled
+        # linearly with dataset size); partitioned variants inherit per-node
+        # compute density from the same anchor factor below.
+        _anchor(out, anchor_total_s * scale, cost_model)
+    elif anchor_total_s is not None:
+        # partitioned: anchor against the unpartitioned factor so partition
+        # pruning shows up as genuinely less work, not a re-fit
+        ref = paper_workloads(scale_gb, False, cost_model, anchor_total_s)
+        for w, wref in zip(out, ref):
+            for n, nref in zip(w.nodes, wref.nodes):
+                in_w = sum(w.nodes[p].size for p in n.parents) + n.base_read
+                in_r = (
+                    sum(wref.nodes[p].size for p in nref.parents)
+                    + nref.base_read
+                )
+                n.compute = nref.compute * (in_w / in_r if in_r else 1.0)
+    return out
+
+
+def _anchor(workloads: list[Workload], target_s: float,
+            cost_model: CostModel) -> None:
+    io_total = sum(w.serial_time(cost_model) - sum(n.compute for n in w.nodes)
+                   for w in workloads)
+    comp_total = sum(n.compute for w in workloads for n in w.nodes)
+    factor = max((target_s - io_total) / comp_total, 0.05) if comp_total else 1.0
+    for w in workloads:
+        for n in w.nodes:
+            n.compute *= factor
+
+
+# ---------------------------------------------------------------------------
+# Real (executable) workloads for the Controller — small scale, real tables
+# ---------------------------------------------------------------------------
+
+def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
+                     n_cols: int = 4, seed: int = 0) -> Workload:
+    """Attach real compute fns + actual base tables. Root sizes are rescaled
+    to ``bytes_per_root`` so tests/benches run in seconds; a calibration pass
+    (the paper's 'metrics from previous runs') then measures true output
+    sizes."""
+    from . import tableops as T
+
+    rows = max(64, bytes_per_root // (8 * n_cols))
+
+    def make_fn(i: int, node: MVNode):
+        op = node.op
+
+        def fn(inputs):
+            if op == "SCAN":
+                return T.make_base_table(rows, n_cols, seed=seed * 1000 + i)
+            if op == "JOIN" and len(inputs) >= 2:
+                out = inputs[0]
+                for other in inputs[1:]:
+                    out = T.op_join(out, other)
+                return out
+            if op == "UNION" and len(inputs) >= 2:
+                out = inputs[0]
+                for other in inputs[1:]:
+                    out = T.op_union(out, other)
+                return out
+            x = inputs[0]
+            if op == "FILTER":
+                return T.op_filter(x, threshold=-0.3 + 0.1 * (i % 7))
+            if op == "PROJECT":
+                return T.op_project(x, keep_frac=0.6)
+            if op == "AGG":
+                return T.op_agg(x)
+            return T.op_map(x)
+
+        return fn
+
+    nodes = [
+        MVNode(
+            name=n.name,
+            parents=n.parents,
+            op=n.op,
+            size=n.size,
+            compute=n.compute,
+            fn=make_fn(i, n),
+        )
+        for i, n in enumerate(workload.nodes)
+    ]
+    return Workload(name=workload.name + "_real", nodes=nodes, meta=dict(workload.meta))

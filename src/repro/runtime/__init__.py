@@ -1,0 +1,4 @@
+"""Runtime fault tolerance: preemption, stragglers, elastic restarts."""
+from .ft import PreemptionHandler, StragglerDetector, elastic_restore
+
+__all__ = ["PreemptionHandler", "StragglerDetector", "elastic_restore"]

@@ -1,0 +1,40 @@
+"""Serving steps: batched prefill and single-token decode over a sharded KV /
+SSD-state cache. These are the functions the decode_* / prefill_* dry-run
+shapes lower."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import decode_step as _decode
+from ..models import make_cache, prefill as _prefill
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, cache, patch_embeds=None):
+        return _prefill(cfg, params, tokens, cache, patch_embeds=patch_embeds)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, cache, cache_pos):
+        logits, new_cache = _decode(cfg, params, tokens, cache, cache_pos)
+        return logits, new_cache
+
+    return decode_step
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, max_new: int):
+    """Simple batched greedy loop (examples / integration tests)."""
+    b, plen = prompt.shape
+    total = plen + max_new
+    cache = make_cache(cfg, b, total)
+    logits, cache = _prefill(cfg, params, prompt, cache)
+    step = jax.jit(lambda t, c, p: _decode(cfg, params, t, c, p))
+    out = [jnp.argmax(logits[..., : cfg.vocab_size], axis=-1)]
+    for i in range(max_new - 1):
+        logits, cache = step(out[-1], cache, jnp.int32(plen + i))
+        out.append(jnp.argmax(logits[..., : cfg.vocab_size], axis=-1))
+    return jnp.stack(out, axis=1)

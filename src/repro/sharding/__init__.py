@@ -1,0 +1,24 @@
+"""GSPMD sharding strategy + gradient compression."""
+from . import compression
+from .strategy import (
+    activation_sharding_constraint,
+    audit_divisibility,
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    mesh_axis_sizes,
+    opt_state_specs,
+    param_specs,
+)
+
+__all__ = [
+    "compression",
+    "param_specs",
+    "opt_state_specs",
+    "batch_specs",
+    "cache_specs",
+    "dp_axes",
+    "mesh_axis_sizes",
+    "audit_divisibility",
+    "activation_sharding_constraint",
+]

@@ -1,0 +1,28 @@
+"""Mesh context handle for layers that need explicit collectives (shard_map
+MoE dispatch). Set by launchers/dry-run before tracing; None means pure-GSPMD
+paths only."""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextmanager
+def mesh_context(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev

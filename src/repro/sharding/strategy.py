@@ -1,0 +1,187 @@
+"""Per-architecture GSPMD sharding rules.
+
+Mesh axes: ``('data','model')`` single-pod (16×16), ``('pod','data','model')``
+multi-pod (2×16×16). The data-parallel "DP" spec entry is the tuple of all
+non-model axes so batch and ZeRO/FSDP sharding automatically use pod×data.
+
+Strategy (see DESIGN.md §6):
+* TP over ``model``: q heads (padded per kv-group when 56∤16), MLP hidden,
+  vocab (embed rows / lm_head cols), MoE experts when E % 16 == 0 (arctic,
+  jamba) else per-expert ffn (qwen's 60 experts), SSD inner dim / heads.
+* KV projections replicate when kv_heads < TP (llama3/stablelm-12b/jamba/
+  llava/arctic) — standard Megatron GQA practice.
+* FSDP over DP on the weights' free dim for archs whose bf16 weights exceed
+  HBM/16 (llama3-405b, arctic-480b, jamba-52b).
+* ZeRO-1: optimizer moments always take the FSDP-style spec regardless.
+
+Rules are path-keyed over the actual parameter tree, so they stay valid as the
+model grows; `audit_divisibility` (tested for all 10 archs) verifies every
+sharded dim divides its mesh axes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _tp(mesh) -> int:
+    return mesh_axis_sizes(mesh)["model"]
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh, fsdp: bool | None = None):
+    """PartitionSpec pytree for the parameter tree (shapes or arrays)."""
+    if fsdp is None:
+        fsdp = cfg.fsdp_params
+    tp = _tp(mesh)
+    DP = dp_axes(mesh)
+    dfree = DP if fsdp else None
+    kv_shardable = cfg.n_kv_heads % tp == 0 and cfg.n_kv_heads > 0
+    ep = cfg.moe_experts_padded % tp == 0 and cfg.moe_experts > 0
+    ssm_h_ok = cfg.ssm_heads % tp == 0 if cfg.ssm_state else False
+
+    def rule(path: tuple[str, ...], leaf) -> P:
+        name = path[-1]
+        joined = "/".join(path)
+        nd = len(leaf.shape)
+        if name == "embed":
+            return P("model", dfree)
+        if name == "lm_head" or name == "patch_adapter":
+            return P(dfree, "model")
+        if name == "final_norm" or "norm" in name:
+            return P(*([None] * nd))
+        # ---- stacked block params: leading dim is the scan/group dim -------
+        if name == "wq":
+            return P(None, dfree, "model")
+        if name in ("wk", "wv"):
+            return P(None, dfree, "model" if kv_shardable else None)
+        if name == "wo" and "mixer" in joined:
+            return P(None, "model", dfree)
+        if name == "wi":  # dense/shared mlp fused gate|up
+            return P(None, dfree, "model")
+        if name == "wo":  # ffn down-proj
+            return P(None, "model", dfree)
+        if name == "router":
+            return P(None, None, None)
+        if name == "w_in":  # (G, E, d, 2ffe)
+            return P(None, "model", dfree, None) if ep else P(None, None, dfree, "model")
+        if name == "w_out":  # (G, E, ffe, d)
+            return P(None, "model", None, dfree) if ep else P(None, None, "model", dfree)
+        # ---- ssm ------------------------------------------------------------
+        if name in ("w_z", "w_x"):
+            return P(None, dfree, "model")
+        if name in ("w_bc", "w_dt"):
+            return P(None, dfree, None)
+        if name == "conv_x_w":
+            return P(None, None, "model")
+        if name in ("conv_x_b", "norm_w"):
+            return P(None, "model")
+        if name in ("conv_bc_w",):
+            return P(None, None, None)
+        if name in ("conv_bc_b",):
+            return P(None, None)
+        if name in ("a_log", "d_skip", "dt_bias"):
+            return P(None, "model") if ssm_h_ok else P(None, None)
+        if name == "out_proj":
+            return P(None, "model", dfree)
+        return P(*([None] * nd))
+
+    def walk(tree, path=()):  # dict-tree walker keeping string paths
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return rule(path, tree)
+
+    return walk(params_shape)
+
+
+def opt_state_specs(cfg: ModelConfig, params_shape: Any, mesh):
+    """ZeRO-1: moments take the FSDP-style spec unconditionally."""
+    return param_specs(cfg, params_shape, mesh, fsdp=True)
+
+
+def batch_specs(cfg: ModelConfig, mesh) -> dict[str, P]:
+    DP = dp_axes(mesh)
+    spec = {"tokens": P(DP, None), "labels": P(DP, None)}
+    if cfg.frontend == "vlm":
+        spec["patch_embeds"] = P(DP, None, None)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh):
+    """Decode/prefill cache: batch over DP; kv/ssd heads over model when
+    divisible."""
+    tp = _tp(mesh)
+    DP = dp_axes(mesh)
+    kv_shardable = cfg.n_kv_heads % tp == 0 and cfg.n_kv_heads > 0
+    ssm_h_ok = cfg.ssm_heads % tp == 0 if cfg.ssm_state else False
+
+    def rule(path, leaf):
+        name = path[-1]
+        if name in ("k", "v"):   # (G, b, kv, S, hd)
+            if kv_shardable:
+                return P(None, DP, "model", None, None)
+            if cfg.shard_cache_seq:
+                # §Perf: kv_heads < TP would leave the cache unsharded on the
+                # model axis (139GB/device at llama3-405b decode_32k!) —
+                # shard the sequence dim instead.
+                return P(None, DP, None, "model", None)
+            return P(None, DP, None, None, None)
+        if name == "conv_x":     # (G, b, k-1, di)
+            return P(None, DP, None, "model")
+        if name == "conv_bc":
+            return P(None, DP, None, None)
+        if name == "ssm":        # (G, b, h, hd, n)
+            return P(None, DP, "model" if ssm_h_ok else None, None, None)
+        return P(*([None] * len(leaf.shape)))
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return rule(path, tree)
+
+    return walk(cache_shape)
+
+
+def activation_sharding_constraint(mesh):
+    """(b, s, d) activations: batch over DP."""
+    return P(dp_axes(mesh), None, None)
+
+
+def audit_divisibility(cfg: ModelConfig, params_shape: Any, mesh,
+                       specs=None) -> list[str]:
+    """Every sharded dim must divide the product of its mesh axes. Returns a
+    list of violations (empty = clean)."""
+    sizes = mesh_axis_sizes(mesh)
+    specs = specs if specs is not None else param_specs(cfg, params_shape, mesh)
+    problems: list[str] = []
+
+    def leaf_paths(tree, path=()):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                yield from leaf_paths(v, path + (k,))
+        else:
+            yield path, tree
+
+    shape_leaves = dict(leaf_paths(params_shape))
+    for path, spec in leaf_paths(specs):
+        shape = shape_leaves[path].shape
+        for dim, entry in zip(shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            factor = int(np.prod([sizes[a] for a in axes]))
+            if dim % factor != 0:
+                problems.append(f"{'/'.join(path)}: dim {dim} % {factor} != 0")
+    return problems

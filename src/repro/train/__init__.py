@@ -1,0 +1,13 @@
+"""Training: sharded AdamW, microbatched train step, driver loop."""
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, lr_at
+from .step import init_train_state, make_train_step, train_state_specs
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_update",
+    "init_opt_state",
+    "lr_at",
+    "make_train_step",
+    "init_train_state",
+    "train_state_specs",
+]

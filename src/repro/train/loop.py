@@ -1,0 +1,113 @@
+"""Training driver: S/C-scheduled data pipeline → sharded train step →
+write-behind checkpointing, with preemption handling, straggler monitoring,
+and crash-resume.
+
+Runs at any scale: tests/examples use a reduced config on local devices; the
+same loop drives the production mesh (launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs.base import ModelConfig
+from ..core.planner import plan_remat
+from ..data import BatchIterator, DataConfig, materialize_dataset
+from ..models import init_params
+from ..runtime import PreemptionHandler, StragglerDetector
+from .optimizer import AdamWConfig
+from .step import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 20
+    batch_size: int = 8
+    ckpt_every: int = 5
+    ckpt_dir: str = "ckpts"
+    data_dir: str = "data"
+    seed: int = 0
+    compress_grads: bool = False
+    log_every: int = 5
+
+
+def run_training(
+    cfg: ModelConfig,
+    loop: LoopConfig,
+    dcfg: DataConfig | None = None,
+    opt: AdamWConfig = AdamWConfig(),
+    on_step: Callable[[int, dict], None] | None = None,
+) -> dict:
+    """Returns {"state": final_state, "losses": [...], "resumed_from": step}."""
+    dcfg = dcfg or DataConfig(seq_len=min(cfg.d_model, 128) + 1)
+    data_root = Path(loop.data_dir)
+    if not (data_root / "MANIFEST.json").exists():
+        materialize_dataset(dcfg, data_root)  # S/C-scheduled refresh
+    it = BatchIterator(data_root, dcfg, loop.batch_size)
+
+    save_names = ()
+    if cfg.remat_policy == "planner":
+        from ..configs.base import ShapeSpec
+
+        plan = plan_remat(
+            cfg, ShapeSpec("local", dcfg.seq_len - 1, loop.batch_size, "train"),
+            dp=1,
+        )
+        save_names = plan.save_names
+
+    step_fn = jax.jit(
+        make_train_step(
+            cfg, opt, dp=1, global_rows=loop.batch_size,
+            save_names=save_names, compress_grads=loop.compress_grads,
+        ),
+        donate_argnums=(0,),
+    )
+
+    ckpt = CheckpointManager(loop.ckpt_dir)
+    params = init_params(cfg, jax.random.PRNGKey(loop.seed))
+    state = init_train_state(cfg, params, compress_grads=loop.compress_grads)
+    start_step = 0
+    resumed_from = None
+    if ckpt.latest_step() is not None:
+        full = {"train": state, "data": it.get_state()}
+        restored = ckpt.restore(full)
+        state = restored["train"]
+        it.set_state(jax.tree.map(lambda x: int(np.asarray(x)), restored["data"]))
+        start_step = int(np.asarray(state["opt"]["step"]))
+        resumed_from = start_step
+
+    preempt = PreemptionHandler().install()
+    straggle = StragglerDetector(n_hosts=max(jax.process_count(), 1))
+    losses: list[float] = []
+    try:
+        for step in range(start_step, loop.steps):
+            t0 = time.perf_counter()
+            batch = it.next_batch()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            straggle.observe(step, [time.perf_counter() - t0])
+            if on_step:
+                on_step(step, metrics)
+            if (step + 1) % loop.ckpt_every == 0 or preempt.preempted:
+                ckpt.save({"train": state, "data": it.get_state()}, step + 1)
+            if preempt.preempted:
+                break
+        ckpt.save({"train": state, "data": it.get_state()}, loop.steps,
+                  blocking=False)
+        ckpt.wait()
+    finally:
+        preempt.uninstall()
+    return {
+        "state": state,
+        "losses": losses,
+        "resumed_from": resumed_from,
+        "straggler_events": straggle.events,
+        "preempted": preempt.preempted,
+    }

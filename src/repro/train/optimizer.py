@@ -1,0 +1,74 @@
+"""Sharded AdamW (functional, dtype-configurable moments for 405B-class HBM).
+
+Moments live in ``cfg.opt_state_dtype`` and are ZeRO-1 sharded (see
+``sharding.opt_state_specs``); update math always runs in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def lr_at(opt: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(opt.warmup_steps, 1), 1.0)
+    return opt.lr * warm
+
+
+def init_opt_state(params: Any, dtype: str = "float32") -> dict:
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    opt: AdamWConfig, params: Any, grads: Any, state: dict
+) -> tuple[Any, dict, dict]:
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.grad_clip / (gn + 1e-9))
+    lr = lr_at(opt, step)
+    b1, b2 = opt.b1, opt.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p.astype(
+            jnp.float32
+        )
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

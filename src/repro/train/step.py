@@ -1,0 +1,121 @@
+"""Train-step factory: microbatched grad accumulation, remat policy, optional
+int8 error-feedback gradient compression, AdamW update.
+
+The returned function is pure (state, batch) → (state, metrics) and is meant
+to be jitted with in/out shardings from ``sharding.strategy`` (see
+launch/train.py and launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import lm_loss
+from ..sharding import compression
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def init_train_state(cfg: ModelConfig, params: Any,
+                     compress_grads: bool = False) -> dict:
+    state = {"params": params, "opt": init_opt_state(params, cfg.opt_state_dtype)}
+    if compress_grads:
+        state["ef_error"] = compression.init_error_state(params)
+    return state
+
+
+def _num_microbatches(cfg: ModelConfig, global_rows: int, dp: int) -> int:
+    per_dev = max(global_rows // max(dp, 1), 1)
+    n_micro = max(per_dev // max(cfg.microbatch_size, 1), 1)
+    while global_rows % n_micro != 0:  # keep reshape exact
+        n_micro -= 1
+    return max(n_micro, 1)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: AdamWConfig = AdamWConfig(),
+    dp: int = 1,
+    global_rows: int | None = None,
+    save_names: tuple[str, ...] = (),
+    compress_grads: bool = False,
+):
+    """Build train_step(state, batch) -> (state, metrics).
+
+    ``dp`` and ``global_rows`` fix the microbatch count at trace time.
+    Microbatch rows are strided (``rows[i::n_micro]``) so every microbatch
+    keeps the full data-parallel sharding of the batch axis.
+    """
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        rows = batch["tokens"].shape[0]
+        n_micro = _num_microbatches(cfg, global_rows or rows, dp)
+
+        def micro_grads(p, mb):
+            (loss, aux), g = jax.value_and_grad(
+                lambda q: lm_loss(cfg, q, mb, save_names=save_names),
+                has_aux=True,
+            )(p)
+            return loss, aux, g
+
+        if n_micro == 1:
+            # no accumulation loop: avoids a 1-trip while (and lets XLA cost
+            # analysis see the true per-step FLOPs in the dry-run's
+            # cost-accurate pass)
+            loss, _aux, grads = micro_grads(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def to_micro(x):
+                return x.reshape(
+                    rows // n_micro, n_micro, *x.shape[1:]
+                ).swapaxes(0, 1)
+
+            micro = {k: to_micro(v) for k, v in batch.items()}
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                loss, _aux, g = micro_grads(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (gzero, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+
+        new_state = dict(state)
+        if compress_grads:
+            grads, new_err = compression.ef_compress_tree(grads, state["ef_error"])
+            new_state["ef_error"] = new_err
+
+        new_params, new_opt, om = adamw_update(opt, params, grads, state["opt"])
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = {"loss": loss, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def train_state_specs(cfg: ModelConfig, params_shape: Any, mesh,
+                      compress_grads: bool = False):
+    """PartitionSpec pytree matching init_train_state's structure."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..sharding.strategy import opt_state_specs, param_specs
+
+    pspec = param_specs(cfg, params_shape, mesh)
+    ospec = opt_state_specs(cfg, params_shape, mesh)
+    state_spec = {
+        "params": pspec,
+        "opt": {"m": ospec, "v": ospec, "step": P()},
+    }
+    if compress_grads:
+        state_spec["ef_error"] = ospec
+    return state_spec

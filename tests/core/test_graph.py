@@ -1,0 +1,70 @@
+import pytest
+
+from repro.core import MVGraph, positions
+
+
+def diamond():
+    #   0 -> 1 -> 3
+    #   0 -> 2 -> 3
+    return MVGraph(
+        n=4,
+        edges=((0, 1), (0, 2), (1, 3), (2, 3)),
+        sizes=(10.0, 2.0, 3.0, 1.0),
+        scores=(5.0, 1.0, 1.0, 0.5),
+    )
+
+
+def test_cycle_rejected():
+    with pytest.raises(ValueError):
+        MVGraph(n=2, edges=((0, 1), (1, 0)), sizes=(1, 1), scores=(1, 1))
+
+
+def test_topological_order():
+    g = diamond()
+    order = g.topological_order()
+    assert g.is_topological(order)
+    assert not g.is_topological([3, 0, 1, 2])
+    assert not g.is_topological([0, 0, 1, 2])
+
+
+def test_last_child_pos_and_residency():
+    g = diamond()
+    order = [0, 1, 2, 3]
+    lc = g.last_child_pos(order)
+    assert lc[0] == 2  # last child of 0 is node 2 at step 2
+    assert lc[1] == 3
+    assert lc[2] == 3
+    assert lc[3] == 3  # childless -> own step
+    # flag node 0: resident steps 0..2
+    prof = g.residency_profile({0}, order)
+    assert prof == [10.0, 10.0, 10.0, 0.0]
+    assert g.peak_memory({0}, order) == 10.0
+    # avg memory: (lc-pos)*s / n = (2-0)*10/4
+    assert g.avg_memory({0}, order) == pytest.approx(5.0)
+
+
+def test_resident_sets_match_definition():
+    g = diamond()
+    order = [0, 2, 1, 3]
+    pos = positions(order)
+    lc = g.last_child_pos(order)
+    sets = g.resident_sets(order)
+    for k, executed in enumerate(order):
+        expected = frozenset(
+            j for j in range(g.n) if pos[j] <= k <= lc[j]
+        )
+        assert sets[k] == expected
+
+
+def test_resident_sets_respect_exclusion():
+    g = diamond()
+    sets = g.resident_sets([0, 1, 2, 3], exclude=frozenset({0}))
+    assert all(0 not in s for s in sets)
+
+
+def test_subgraph():
+    g = diamond()
+    sub = g.subgraph([0, 1, 3])
+    assert sub.n == 3
+    assert set(sub.edges) == {(0, 1), (1, 2)}
+    assert sub.sizes == (10.0, 2.0, 1.0)

@@ -1,0 +1,159 @@
+"""MKP solver correctness: Algorithm 1 pieces + brute-force validation."""
+import itertools
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    MVGraph,
+    branch_and_bound_mkp,
+    excluded_nodes,
+    get_constraints,
+    greedy_select,
+    ratio_select,
+    simplified_mkp,
+)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def random_dag(rng_draw, max_n=10):
+    n = rng_draw(st.integers(2, max_n))
+    edges = []
+    for j in range(1, n):
+        for i in range(j):
+            if rng_draw(st.booleans()) and rng_draw(st.booleans()):
+                edges.append((i, j))
+    sizes = [rng_draw(st.integers(1, 20)) for _ in range(n)]
+    scores = [rng_draw(st.integers(0, 20)) for _ in range(n)]
+    return MVGraph(n, tuple(edges), tuple(float(s) for s in sizes),
+                   tuple(float(t) for t in scores))
+
+
+def brute_force_best(graph: MVGraph, budget: float, order):
+    """Exhaustive best feasible flag set under a fixed order."""
+    best, best_score = frozenset(), 0.0
+    nodes = [i for i in range(graph.n) if graph.scores[i] > 0]
+    for r in range(len(nodes) + 1):
+        for combo in itertools.combinations(nodes, r):
+            if graph.peak_memory(combo, order) <= budget + 1e-9:
+                sc = graph.total_score(combo)
+                if sc > best_score:
+                    best_score, best = sc, frozenset(combo)
+    return best, best_score
+
+
+# ---------------------------------------------------------------------------
+# unit tests
+# ---------------------------------------------------------------------------
+
+def chain(sizes, scores):
+    n = len(sizes)
+    return MVGraph(n, tuple((i, i + 1) for i in range(n - 1)),
+                   tuple(sizes), tuple(scores))
+
+
+def test_excluded_nodes():
+    g = chain([5.0, 50.0, 5.0], [1.0, 1.0, 0.0])
+    ex = excluded_nodes(g, budget=10.0)
+    assert ex == frozenset({1, 2})  # node1 too big, node2 zero score
+
+
+def test_constraints_trivial_and_maximal_pruning():
+    # chain 0->1->2, all size 4, budget 10: every resident set fits -> trivial
+    g = chain([4.0, 4.0, 4.0], [1.0, 1.0, 1.0])
+    assert get_constraints(g, 10.0, [0, 1, 2], frozenset()) == []
+    # budget 5: {0,1} and {1,2} both violate-able and maximal
+    cons = get_constraints(g, 5.0, [0, 1, 2], frozenset())
+    assert frozenset({0, 1}) in cons and frozenset({1, 2}) in cons
+    # subset {1} must have been pruned as non-maximal
+    assert frozenset({1}) not in cons
+
+
+def test_bnb_single_knapsack_exact():
+    # classic knapsack: values 60,100,120 weights 10,20,30 cap 50 -> 220
+    items = [0, 1, 2]
+    res = branch_and_bound_mkp(
+        items,
+        profits={0: 60, 1: 100, 2: 120},
+        weights={0: 10, 1: 20, 2: 30},
+        constraints=[frozenset(items)],
+        budget=50,
+    )
+    assert res.chosen == frozenset({1, 2})
+    assert res.objective == 220
+    assert res.optimal
+
+
+def test_simplified_mkp_flags_unconstrained_nodes():
+    # two independent childless nodes are only resident at their own step
+    g = MVGraph(2, (), (8.0, 8.0), (3.0, 4.0))
+    u = simplified_mkp(g, budget=10.0, order=[0, 1])
+    assert u == frozenset({0, 1})  # childless: resident only at own step
+
+
+def test_simplified_mkp_respects_budget():
+    # 0->2, 1->2 ; flagging both 0 and 1 co-resident at step of 2 -> pick best
+    g = MVGraph(3, ((0, 2), (1, 2)), (8.0, 8.0, 1.0), (3.0, 4.0, 1.0))
+    u = simplified_mkp(g, budget=10.0, order=[0, 1, 2])
+    assert g.peak_memory(u, [0, 1, 2]) <= 10.0
+    assert u == frozenset({1, 2})  # node1 scores higher than node0
+
+
+# ---------------------------------------------------------------------------
+# paper Figure-7-style instance: execution order determines feasibility
+# ---------------------------------------------------------------------------
+
+def fig7_style():
+    # 0:A(100)->2:B(5) ; 1:C(100)->3:D(5) ; 4:E(10) independent leaf
+    # scores == sizes (paper's simplification)
+    sizes = (100.0, 100.0, 5.0, 5.0, 10.0)
+    return MVGraph(5, ((0, 2), (1, 3)), sizes, sizes)
+
+
+def test_fig7_order_determines_flaggable_set():
+    g = fig7_style()
+    bad = [0, 1, 2, 3, 4]   # A C B D E : A and C co-resident
+    good = [0, 2, 1, 3, 4]  # A B C D E : A released before C executes
+    u_bad = simplified_mkp(g, 100.0, bad)
+    u_good = simplified_mkp(g, 100.0, good)
+    assert g.total_score(u_bad) == pytest.approx(115.0)  # one big + D + E
+    assert g.total_score(u_good) == pytest.approx(210.0)  # both bigs + E
+    assert {0, 1} <= set(u_good)
+    # brute force agreement
+    _, bf_bad = brute_force_best(g, 100.0, bad)
+    _, bf_good = brute_force_best(g, 100.0, good)
+    assert g.total_score(u_bad) == pytest.approx(bf_bad)
+    assert g.total_score(u_good) == pytest.approx(bf_good)
+
+
+# ---------------------------------------------------------------------------
+# property tests: exactness vs brute force, feasibility, dominance
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_mkp_matches_brute_force(data):
+    g = random_dag(data.draw, max_n=9)
+    budget = float(data.draw(st.integers(5, 40)))
+    order = g.topological_order()
+    u = simplified_mkp(g, budget, order)
+    assert g.peak_memory(u, order) <= budget + 1e-9
+    _, bf = brute_force_best(g, budget, order)
+    assert g.total_score(u) == pytest.approx(bf)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_mkp_dominates_heuristics(data):
+    g = random_dag(data.draw, max_n=10)
+    budget = float(data.draw(st.integers(5, 40)))
+    order = g.topological_order()
+    u = simplified_mkp(g, budget, order)
+    for heur in (greedy_select, ratio_select):
+        uh = heur(g, budget, order)
+        assert g.peak_memory(uh, order) <= budget + 1e-9
+        assert g.total_score(u) >= g.total_score(uh) - 1e-9

@@ -1,0 +1,53 @@
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core.planner import plan_remat
+
+
+def test_planner_respects_budget():
+    cfg = get_config("llama3-405b")
+    plan = plan_remat(cfg, SHAPES["train_4k"], dp=16, hbm_activation_budget=2e9)
+    assert plan.used_bytes <= plan.budget_bytes
+    for n in plan.save_names:
+        assert n in plan.candidates
+
+
+def test_planner_saves_everything_with_huge_budget():
+    cfg = get_config("gemma-7b")
+    plan = plan_remat(cfg, SHAPES["train_4k"], dp=16, hbm_activation_budget=1e15)
+    assert set(plan.save_names) == set(plan.candidates)
+
+
+def test_planner_saves_nothing_with_zero_budget():
+    cfg = get_config("gemma-7b")
+    plan = plan_remat(cfg, SHAPES["train_4k"], dp=16, hbm_activation_budget=0.0)
+    assert plan.save_names == ()
+
+
+def test_planner_prefers_cheap_bytes_high_recompute():
+    """Attention-heavy archs: mixer_out (quadratic recompute) must win over
+    ffn_out when only one fits."""
+    cfg = get_config("llama3-405b")
+    # budget that fits exactly one candidate class
+    c = plan_remat(cfg, SHAPES["train_4k"], dp=16, hbm_activation_budget=1e15)
+    sizes = {n: v["bytes"] for n, v in c.candidates.items()}
+    one_fits = min(sizes.values()) * 1.01
+    plan = plan_remat(cfg, SHAPES["train_4k"], dp=16,
+                      hbm_activation_budget=one_fits)
+    if plan.save_names:
+        per_byte = {
+            n: v["recompute_s"] / max(v["bytes"], 1)
+            for n, v in plan.candidates.items()
+            if v["bytes"] <= one_fits
+        }
+        best = max(per_byte, key=per_byte.get)
+        assert best in plan.save_names
+
+
+def test_planner_applies_to_ssm_archs():
+    cfg = get_config("mamba2-2.7b")
+    plan = plan_remat(cfg, SHAPES["train_4k"], dp=16, hbm_activation_budget=1e10)
+    assert "mixer_out" in plan.candidates  # SSD recompute is the node set
+    assert "ffn_out" in plan.candidates
+    assert plan.candidates["ffn_out"]["bytes"] == 0  # no MLPs in mamba2

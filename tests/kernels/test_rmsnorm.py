@@ -1,0 +1,22 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref, rmsnorm
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 64), (3, 5, 128), (300, 256)])
+@pytest.mark.parametrize("with_residual", [False, True])
+def test_rmsnorm_matches_ref(shape, dtype, with_residual):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k1, shape, dtype)
+    w = jax.random.normal(k2, shape[-1:], dtype) * 0.1 + 1.0
+    r = jax.random.normal(k3, shape, dtype) if with_residual else None
+    got = rmsnorm(x, w, residual=r, block_rows=64, interpret=True)
+    expect = ref.rmsnorm(x, w, residual=r)
+    tol = dict(atol=1e-5, rtol=1e-5) if dtype == jnp.float32 else dict(atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(expect, np.float32), **tol
+    )

@@ -1,0 +1,84 @@
+"""Dry-run machinery: collective parsing unit tests + a subprocess dry-run of
+a tiny arch on an 8-device mesh exercising the real dryrun.py code path."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.dryrun import _bytes_of_type, _pick_unroll, collective_bytes
+
+
+def test_bytes_of_type():
+    assert _bytes_of_type("bf16[8,128]") == 8 * 128 * 2
+    assert _bytes_of_type("f32[2,2]") == 16
+    assert _bytes_of_type("(bf16[4], f32[4])") == 8 + 16
+    assert _bytes_of_type("pred[]") == 1  # scalar: empty dims
+    assert _bytes_of_type("token[]") == 0  # non-numeric types ignored
+
+
+def test_collective_bytes_parsing():
+    hlo = textwrap.dedent(
+        """
+        ENTRY main {
+          %p = bf16[16,64]{1,0} parameter(0)
+          %ar = bf16[16,64]{1,0} all-reduce(%p), replica_groups={}
+          %ag = bf16[32,64]{1,0} all-gather(%p), dimensions={0}
+          %rs.1 = f32[8,64]{1,0} reduce-scatter(%p), dimensions={0}
+          %cp = bf16[16,64]{1,0} collective-permute-start(%p)
+          %add = bf16[16,64]{1,0} add(%p, %p)
+        }
+        """
+    )
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 16 * 64 * 2
+    assert out["all-gather"] == 32 * 64 * 2
+    assert out["reduce-scatter"] == 8 * 64 * 4
+    assert out["collective-permute"] == 16 * 64 * 2
+    assert out["count"] == 4
+    assert out["total"] == sum(
+        out[k] for k in
+        ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+    )
+
+
+def test_pick_unroll():
+    assert _pick_unroll(126) == 9
+    assert _pick_unroll(28) == 7
+    assert _pick_unroll(64) == 8
+    assert _pick_unroll(4) == 4
+    assert _pick_unroll(1) == 1
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_tiny_mesh(tmp_path):
+    """All three step kinds lower+compile for a reduced arch on (2,4) mesh."""
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, json
+        import repro.launch.dryrun as dr
+        from repro.configs import get_config
+        from repro.configs.base import ShapeSpec
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = get_config("jamba-v0.1-52b").reduced()
+        for spec in [ShapeSpec("t", 64, 8, "train"),
+                     ShapeSpec("p", 64, 8, "prefill"),
+                     ShapeSpec("d", 64, 8, "decode")]:
+            low = dr.build_lowered(cfg, spec, mesh)
+            comp = low.compile()
+            cb = dr.collective_bytes(comp.as_text())
+            assert cb["count"] > 0, spec.kind
+            ma = comp.memory_analysis()
+            assert ma.temp_size_in_bytes >= 0
+        print("OK")
+        """
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=".", timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

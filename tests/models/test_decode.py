@@ -1,0 +1,61 @@
+"""Serving path: prefill + incremental decode must match the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, forward, init_params, make_cache, prefill
+
+# one dense, one GQA, one SSM, one hybrid-MoE — covers every cache kind
+ARCHS = ["stablelm-12b", "mamba2-2.7b", "jamba-v0.1-52b", "musicgen-large"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_plus_decode_matches_forward(arch):
+    # float32 so the check validates *logic* exactly (bf16 accumulation noise
+    # between the chunked prefill-state path and the sequential decode
+    # recurrence otherwise drifts past tight tolerances). Capacity factor set
+    # drop-free: token dropping is batch-dependent by construction, so the
+    # full-forward oracle only matches when no MoE tokens are dropped.
+    cfg = get_config(arch).reduced(dtype="float32", moe_capacity_factor=16.0)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    b, prompt_len, gen_len = 2, 16, 4
+    total = prompt_len + gen_len
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, total), 0, cfg.vocab_size)
+
+    # oracle: full forward over the whole sequence
+    full_logits, _, _ = forward(cfg, params, tokens)
+
+    # serving: prefill prompt, then decode token-by-token (teacher-forced)
+    cache = make_cache(cfg, b, total)
+    last, cache = prefill(cfg, params, tokens[:, :prompt_len], cache)
+    np.testing.assert_allclose(
+        np.asarray(last, np.float32),
+        np.asarray(full_logits[:, prompt_len - 1], np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+    for t in range(prompt_len, total):
+        step_logits, cache = decode_step(
+            cfg, params, tokens[:, t], cache, jnp.int32(t)
+        )
+        np.testing.assert_allclose(
+            np.asarray(step_logits, np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            atol=2e-2, rtol=2e-2,
+            err_msg=f"{arch}: decode step {t} diverged from forward",
+        )
+
+
+def test_decode_is_jittable_and_shape_stable():
+    cfg = get_config("stablelm-3b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, max_len = 2, 32
+    cache = make_cache(cfg, b, max_len)
+    step = jax.jit(lambda tok, c, pos: decode_step(cfg, params, tok, c, pos))
+    tok = jnp.zeros((b,), jnp.int32)
+    logits, cache = step(tok, cache, jnp.int32(0))
+    assert logits.shape == (b, cfg.vocab_padded)
+    logits2, cache = step(tok + 1, cache, jnp.int32(1))
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()

@@ -1,0 +1,60 @@
+import numpy as np
+import pytest
+
+from repro.mv import CatalogOverflowError, DiskStore, MemoryCatalog, table_nbytes
+
+
+def test_catalog_accounting_and_overflow():
+    cat = MemoryCatalog(100.0)
+    cat.put("a", object(), 60.0)
+    assert cat.used_bytes == 60.0
+    assert cat.fits(40.0) and not cat.fits(41.0)
+    with pytest.raises(CatalogOverflowError):
+        cat.put("b", object(), 50.0)
+    cat.put("b", object(), 40.0)
+    assert cat.peak_bytes == 100.0
+    cat.release("a")
+    assert cat.used_bytes == 40.0
+    assert "a" not in cat and "b" in cat
+    # release is idempotent
+    cat.release("a")
+
+
+def test_catalog_rejects_duplicate():
+    cat = MemoryCatalog(10.0)
+    cat.put("a", 1, 1.0)
+    with pytest.raises(KeyError):
+        cat.put("a", 2, 1.0)
+
+
+def test_diskstore_roundtrip_and_manifest(tmp_path):
+    store = DiskStore(tmp_path)
+    t = {"key": np.arange(10, dtype=np.int64), "c0": np.ones(10, np.float32)}
+    store.write("mv1", t)
+    assert store.exists("mv1")
+    back = store.read("mv1")
+    assert set(back) == set(t)
+    for k in t:
+        np.testing.assert_array_equal(back[k], t[k])
+    assert store.manifest()["mv1"] == table_nbytes(t)
+    store.delete("mv1")
+    assert not store.exists("mv1")
+
+
+def test_diskstore_throttle_and_counters(tmp_path):
+    # 1 MB at 10 MB/s -> >= 0.1 s
+    store = DiskStore(tmp_path, read_bw=10e6, write_bw=10e6, latency=0.0)
+    t = {"x": np.zeros(1 << 18, np.float32)}  # 1 MiB
+    wdt = store.write("big", t)
+    assert wdt >= 0.09
+    store.reset_counters()
+    store.read("big")
+    assert store.read_seconds >= 0.09
+
+
+def test_diskstore_write_is_atomic(tmp_path):
+    store = DiskStore(tmp_path)
+    store.write("a", {"x": np.arange(4)})
+    # a stray tmp file (simulated crash) must not appear in the manifest
+    (tmp_path / "b.npz.tmp").write_bytes(b"partial")
+    assert not store.exists("b")

@@ -1,0 +1,107 @@
+"""Simulator semantics, incl. the paper's Fig. 6 timeline."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CostModel, Plan, serial_plan, solve
+from repro.mv import MVNode, Workload, generate_workload, simulate
+
+
+def fig6_workload():
+    """Fig. 4/6: MV1 feeds MV2 and MV3; MV1 flagged."""
+    mv1 = MVNode("MV1", (), "SCAN", size=100e6, compute=1.0)
+    mv2 = MVNode("MV2", (0,), "AGG", size=10e6, compute=1.0)
+    mv3 = MVNode("MV3", (0,), "AGG", size=10e6, compute=1.0)
+    return Workload("fig6", [mv1, mv2, mv3])
+
+
+CM = CostModel(
+    disk_read_bw=100e6,
+    disk_write_bw=50e6,
+    mem_read_bw=1e15,
+    mem_write_bw=1e15,
+    disk_latency=0.0,
+)
+
+
+def plan_for(wl, flagged, order=(0, 1, 2)):
+    g = wl.to_graph(CM)
+    return Plan(
+        order=tuple(order),
+        flagged=frozenset(flagged),
+        score=g.total_score(flagged),
+        peak_memory=g.peak_memory(flagged, list(order)),
+        avg_memory=g.avg_memory(flagged, list(order)),
+        iterations=0,
+        solve_seconds=0.0,
+    )
+
+
+def test_fig6_timeline():
+    wl = fig6_workload()
+    # serial: MV1 (1 + 2write) + MV2 (1read + 1 + 0.2) + MV3 (same) = 7.4s
+    base = simulate(wl, serial_plan(wl.to_graph(CM)), CM, mode="serial")
+    assert base.end_to_end == pytest.approx(7.4, abs=1e-6)
+    # S/C flags MV1: writes overlap; MV2/MV3 read MV1 from memory
+    #   compute channel: 1.0 (MV1) + 1.2 (MV2) + 1.2 (MV3) = 3.4
+    #   writer channel : starts at t=1.0, 2.0s -> free at 3.0
+    rep = simulate(wl, plan_for(wl, {0}), CM, mode="sc")
+    assert rep.end_to_end == pytest.approx(3.4, abs=1e-6)
+    assert rep.catalog_hits == 2
+    assert rep.peak_catalog_bytes == pytest.approx(100e6)
+    assert rep.blocking_read_seconds == pytest.approx(0.0, abs=1e-9)
+    # timeline: MV1 finishes at t=1.0; end-to-end counts the background write
+    names = [e[0] for e in rep.timeline]
+    assert names == ["MV1", "MV2", "MV3"]
+    assert rep.timeline[0][2] == pytest.approx(1.0)
+
+
+def test_background_write_can_be_critical_path():
+    # a huge flagged output whose write outlasts all downstream compute
+    wl = Workload(
+        "w",
+        [
+            MVNode("a", (), "SCAN", size=1000e6, compute=0.1),
+            MVNode("b", (0,), "AGG", size=1e6, compute=0.1),
+        ],
+    )
+    rep = simulate(wl, plan_for(wl, {0}, order=(0, 1)), CM, mode="sc")
+    # writer: starts at 0.1, takes 20s -> dominates
+    assert rep.end_to_end == pytest.approx(0.1 + 20.0, abs=1e-3)
+
+
+def test_lru_mode_caches_reads_but_blocks_writes():
+    wl = fig6_workload()
+    rep = simulate(
+        wl, serial_plan(wl.to_graph(CM)), CM, mode="lru", lru_budget=200e6
+    )
+    # reads of MV1 hit the cache (2 hits) but all writes block
+    assert rep.catalog_hits == 2
+    assert rep.blocking_write_seconds > 0
+    base = simulate(wl, serial_plan(wl.to_graph(CM)), CM, mode="serial")
+    assert rep.end_to_end < base.end_to_end
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sc_never_slower_than_serial(seed):
+    wl = generate_workload(n_nodes=15, seed=seed)
+    g = wl.to_graph(CM)
+    budget = sum(g.sizes) * 0.2
+    plan = solve(g, budget=budget)
+    base = simulate(wl, serial_plan(g), CM, mode="serial")
+    ours = simulate(wl, plan, CM, mode="sc")
+    assert ours.end_to_end <= base.end_to_end + 1e-6
+    assert ours.peak_catalog_bytes <= budget + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_more_workers_scale_compute_only(seed):
+    wl = generate_workload(n_nodes=12, seed=seed)
+    g = wl.to_graph(CM)
+    plan = solve(g, budget=sum(g.sizes) * 0.2)
+    one = simulate(wl, plan, CM, mode="sc", n_workers=1)
+    four = simulate(wl, plan, CM, mode="sc", n_workers=4)
+    assert four.end_to_end <= one.end_to_end + 1e-9
+    assert four.compute_seconds == pytest.approx(one.compute_seconds / 4)

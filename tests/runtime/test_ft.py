@@ -1,0 +1,42 @@
+import os
+import signal
+
+from repro.runtime import PreemptionHandler, StragglerDetector
+
+
+def test_preemption_flag_on_sigterm():
+    h = PreemptionHandler(signals=(signal.SIGUSR1,)).install()
+    try:
+        assert not h.preempted
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert h.preempted
+    finally:
+        h.uninstall()
+
+
+def test_straggler_detector_flags_slow_host():
+    det = StragglerDetector(n_hosts=4, threshold=2.0, patience=3)
+    flagged_at = None
+    for step in range(10):
+        durations = [1.0, 1.0, 1.0, 5.0]  # host 3 is 5x median
+        flagged = det.observe(step, durations)
+        if flagged and flagged_at is None:
+            flagged_at = step
+            assert flagged == [3]
+    assert flagged_at is not None and flagged_at >= 2  # needs `patience` strikes
+    assert any(e.host == 3 for e in det.events)
+
+
+def test_straggler_detector_ignores_uniform_slowness():
+    det = StragglerDetector(n_hosts=4, threshold=2.0, patience=2)
+    for step in range(10):
+        assert det.observe(step, [3.0, 3.1, 2.9, 3.0]) == []
+
+
+def test_straggler_recovery_resets_strikes():
+    det = StragglerDetector(n_hosts=2, threshold=2.0, patience=3, ewma=1.0)
+    det.observe(0, [1.0, 5.0])
+    det.observe(1, [1.0, 5.0])
+    det.observe(2, [1.0, 1.0])  # recovered before 3rd strike
+    assert det.observe(3, [1.0, 1.0]) == []
+    assert not det.events

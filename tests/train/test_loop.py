@@ -1,0 +1,88 @@
+"""End-to-end training loop: loss goes down, crash-resume is exact."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.train.loop import LoopConfig, run_training
+from repro.train.optimizer import AdamWConfig
+
+
+def tiny_cfg():
+    return get_config("stablelm-3b").reduced(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+        vocab_size=64, head_dim=16, microbatch_size=4,
+    )
+
+
+def dconf():
+    return DataConfig(n_shards=2, docs_per_shard=16, doc_len=128,
+                      vocab_size=64, seq_len=33)
+
+
+def test_loss_decreases(tmp_path):
+    res = run_training(
+        tiny_cfg(),
+        LoopConfig(steps=30, batch_size=8, ckpt_every=100,
+                   ckpt_dir=str(tmp_path / "ck"), data_dir=str(tmp_path / "d")),
+        dconf(),
+        AdamWConfig(lr=5e-3, warmup_steps=5),
+    )
+    losses = res["losses"]
+    assert len(losses) == 30
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+    assert all(np.isfinite(losses))
+
+
+def test_crash_resume_matches_uninterrupted(tmp_path):
+    cfg = tiny_cfg()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2)
+
+    # uninterrupted 12 steps
+    res_full = run_training(
+        cfg,
+        LoopConfig(steps=12, batch_size=8, ckpt_every=6,
+                   ckpt_dir=str(tmp_path / "full_ck"),
+                   data_dir=str(tmp_path / "d1"), seed=3),
+        dconf(), opt,
+    )
+
+    # crash after 6 (simulated by running only 6 steps)...
+    run_training(
+        cfg,
+        LoopConfig(steps=6, batch_size=8, ckpt_every=6,
+                   ckpt_dir=str(tmp_path / "ck"), data_dir=str(tmp_path / "d2"),
+                   seed=3),
+        dconf(), opt,
+    )
+    # ...then restart the SAME loop config to 12: must resume from step 6
+    res_resumed = run_training(
+        cfg,
+        LoopConfig(steps=12, batch_size=8, ckpt_every=6,
+                   ckpt_dir=str(tmp_path / "ck"), data_dir=str(tmp_path / "d2"),
+                   seed=3),
+        dconf(), opt,
+    )
+    assert res_resumed["resumed_from"] == 6
+    # identical final params (bitwise: same data, same step sequence)
+    import jax
+
+    for a, b in zip(
+        jax.tree.leaves(res_full["state"]["params"]),
+        jax.tree.leaves(res_resumed["state"]["params"]),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_planner_policy_runs(tmp_path):
+    cfg = tiny_cfg()
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, remat_policy="planner")
+    res = run_training(
+        cfg,
+        LoopConfig(steps=4, batch_size=8, ckpt_every=100,
+                   ckpt_dir=str(tmp_path / "ck"), data_dir=str(tmp_path / "d")),
+        dconf(),
+    )
+    assert all(np.isfinite(res["losses"]))
