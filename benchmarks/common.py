@@ -19,15 +19,26 @@ def catalog_bytes(scale_gb: float, fraction: float = DEFAULT_CATALOG_FRACTION):
 
 
 def run_method(wl: Workload, method: str, budget: float,
-               cost_model=EFFECTIVE_NFS_COST_MODEL, n_workers: int = 1):
-    """End-to-end simulated time for one (workload, method)."""
+               cost_model=EFFECTIVE_NFS_COST_MODEL, n_workers: int = 1,
+               n_writers: int | None = None,
+               max_entry_bytes: float | None = None):
+    """End-to-end simulated time for one (workload, method).
+
+    ``n_workers > 1`` runs the engine with k genuine compute channels, and
+    S/C-family plans are solved with ``n_workers=k`` so they stay
+    budget-feasible under every k-worker interleaving. ``n_writers``
+    controls the background materialization channels (default: one per
+    compute channel — pass 1 to model a saturated shared store instead);
+    ``max_entry_bytes`` caps single flagged entries (one cluster node's
+    catalog share when ``budget`` is a cluster aggregate)."""
     g = wl.to_graph(cost_model)
     if method == "serial":
         return simulate(wl, serial_plan(g), cost_model, mode="serial",
-                        n_workers=n_workers)
+                        n_workers=n_workers, n_writers=n_writers)
     if method == "lru":
         return simulate(wl, serial_plan(g), cost_model, mode="lru",
-                        n_workers=n_workers, lru_budget=budget)
+                        n_workers=n_workers, lru_budget=budget,
+                        n_writers=n_writers)
     node_solver, order_solver = {
         "sc": ("mkp", "madfs"),
         "greedy": ("greedy", "madfs"),
@@ -38,8 +49,10 @@ def run_method(wl: Workload, method: str, budget: float,
         "mkp+random_dfs": ("mkp", "random_dfs"),
     }[method]
     plan = solve(g, budget=budget, node_solver=node_solver,
-                 order_solver=order_solver)
-    return simulate(wl, plan, cost_model, mode="sc", n_workers=n_workers)
+                 order_solver=order_solver, n_workers=n_workers,
+                 max_entry_bytes=max_entry_bytes)
+    return simulate(wl, plan, cost_model, mode="sc", n_workers=n_workers,
+                    n_writers=n_writers)
 
 
 def save_json(name: str, payload) -> Path:
@@ -50,7 +63,7 @@ def save_json(name: str, payload) -> Path:
 
 
 def fmt_table(headers: list[str], rows: list[list]) -> str:
-    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) for i, h in
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows), 0) for i, h in
               enumerate(headers)]
     def line(vals):
         return " | ".join(str(v).ljust(w) for v, w in zip(vals, widths))

@@ -1,0 +1,67 @@
+"""Parallel-vs-serial sweep: what true multi-channel execution buys.
+
+For each paper workload and k ∈ {1, 2, 4, 8} compute channels, runs the
+unified engine's discrete-event backend in both modes and reports
+
+* end-to-end time, its distance from the critical-path lower bound,
+* the S/C speedup at each k (solved with ``n_workers=k`` so plans are
+  feasible under every k-worker interleaving), and
+* the flagged-node count, showing how the concurrency-aware residency
+  windows tighten the plan as k grows (fixed total catalog budget here, in
+  contrast to table5_cluster's per-node catalog scaling).
+"""
+from __future__ import annotations
+
+from repro.core import serial_plan, solve
+from repro.core.speedup import EFFECTIVE_NFS_COST_MODEL
+from repro.mv import paper_workloads, simulate
+
+from .common import catalog_bytes, fmt_table, run_method, save_json
+
+WORKER_SWEEP = (1, 2, 4, 8)
+
+
+def run(scale_gb: float = 100.0, quick: bool = False):
+    budget = catalog_bytes(scale_gb)
+    wls = paper_workloads(scale_gb)
+    if quick:
+        wls = wls[:2]
+    cm = EFFECTIVE_NFS_COST_MODEL
+    out: dict[str, dict] = {}
+    rows = []
+    for wl in wls:
+        g = wl.to_graph(cm)
+        out[wl.name] = {}
+        for k in WORKER_SWEEP:
+            ser = simulate(wl, serial_plan(g), cm, mode="serial", n_workers=k)
+            plan = solve(g, budget=budget, n_workers=k)
+            sc = simulate(wl, plan, cm, mode="sc", n_workers=k)
+            assert sc.peak_catalog_bytes <= budget + 1e-6, (
+                f"{wl.name} k={k}: peak {sc.peak_catalog_bytes} > budget"
+            )
+            out[wl.name][k] = {
+                "serial_s": ser.end_to_end,
+                "sc_s": sc.end_to_end,
+                "speedup": ser.end_to_end / sc.end_to_end,
+                "critical_path_s": sc.critical_path_seconds,
+                "flagged": len(plan.flagged),
+                "peak_bytes": sc.peak_catalog_bytes,
+            }
+            rows.append([
+                wl.name, k, f"{ser.end_to_end:.0f}", f"{sc.end_to_end:.0f}",
+                f"{ser.end_to_end / sc.end_to_end:.2f}x",
+                f"{sc.critical_path_seconds:.0f}",
+                len(plan.flagged),
+            ])
+    print("\n== Parallel-vs-serial sweep (fixed total catalog budget) ==")
+    print(fmt_table(
+        ["workload", "k", "no-opt(s)", "S/C(s)", "speedup", "crit-path(s)",
+         "flagged"],
+        rows,
+    ))
+    save_json("parallel_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

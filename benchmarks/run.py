@@ -16,6 +16,7 @@ from . import (
     fig12_ablation,
     fig13_opttime,
     fig14_sweep,
+    parallel_sweep,
     real_executor,
     roofline,
     table4_readtime,
@@ -28,6 +29,7 @@ MODULES = [
     ("fig11_memcat+table4", table4_readtime.run),   # table4 drives fig11
     ("fig12_ablation", fig12_ablation.run),
     ("table5_cluster", table5_cluster.run),
+    ("parallel_sweep", parallel_sweep.run),
     ("fig13_opttime", fig13_opttime.run),
     ("fig14_sweep", fig14_sweep.run),
     ("real_executor", real_executor.run),

@@ -2,8 +2,19 @@
 1.6% Memory Catalog).
 
 Paper: raw runtime drops with workers; S/C's relative speedup stays ~flat
-(1.60×–1.71×) because the shared materialization bandwidth, not compute, is
-what S/C short-circuits."""
+(1.60×–1.71×) because the blocking materialization I/O, not compute, is what
+S/C short-circuits. Each worker is a genuine compute channel in the unified
+engine (no compute-division approximation): statements run concurrently
+under the window-k dispatch discipline, and S/C plans are re-solved with
+``n_workers=k`` so the Memory Catalog stays within budget under every
+k-worker interleaving.
+
+Modeling assumptions (DESIGN.md §4): aggregate catalog memory and
+background-writer channels both scale with the worker count (each node
+brings its own 1.6% catalog share and its own write-behind thread; the
+paper's near-linear runtime drop implies its NFS is not saturated at 5
+workers). Pass ``n_writers=1`` through ``run_method`` to model a
+saturated shared store instead."""
 from __future__ import annotations
 
 from repro.mv import paper_workloads
@@ -12,23 +23,33 @@ from .common import catalog_bytes, fmt_table, run_method, save_json
 
 
 def run(scale_gb: float = 100.0, quick: bool = False):
-    budget = catalog_bytes(scale_gb)
     wls = paper_workloads(scale_gb)
     out = {}
     rows = []
     for workers in range(1, 6):
+        # Every cluster node hosts its own 1.6%-of-dataset Memory Catalog
+        # share, so the aggregate in-memory budget scales with cluster size
+        # (the paper provisions identical workers). This is what keeps the
+        # relative speedup flat: the wider k-worker residency windows are
+        # compensated by the extra catalog memory the workers bring. The
+        # aggregate is modeled as one pooled catalog — an idealization —
+        # but no single entry may exceed one node's share
+        # (max_entry_bytes), so nothing is flagged that fits nowhere.
+        per_node = catalog_bytes(scale_gb)
+        budget = per_node * workers
         serial = sum(
             run_method(wl, "serial", budget, n_workers=workers).end_to_end
             for wl in wls
         )
         sc = sum(
-            run_method(wl, "sc", budget, n_workers=workers).end_to_end
+            run_method(wl, "sc", budget, n_workers=workers,
+                       max_entry_bytes=per_node).end_to_end
             for wl in wls
         )
         out[workers] = {"serial_s": serial, "sc_s": sc, "speedup": serial / sc}
         rows.append([workers, f"{serial:.0f}", f"{sc:.0f}",
                      f"{serial / sc:.2f}x"])
-    print("\n== Table V: cluster scaling (100GB TPC-DS, 1.6% catalog) ==")
+    print("\n== Table V: cluster scaling (100GB TPC-DS, 1.6% catalog/node) ==")
     print(fmt_table(["workers", "no-opt(s)", "S/C(s)", "speedup"], rows))
     save_json("table5_cluster", out)
     return out

@@ -28,7 +28,12 @@ from .mkp import NODE_SOLVERS
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """An MV refresh plan: execution order + nodes to keep in memory."""
+    """An MV refresh plan: execution order + nodes to keep in memory.
+
+    ``n_workers`` records the concurrency level the plan was verified
+    feasible for; ``peak_memory`` is the worst case over the engine's
+    k-worker interleavings at that level (serial peak when 1).
+    """
 
     order: tuple[int, ...]
     flagged: frozenset[int]
@@ -37,6 +42,7 @@ class Plan:
     avg_memory: float
     iterations: int
     solve_seconds: float
+    n_workers: int = 1
 
     def summary(self, graph: MVGraph) -> str:
         names = [graph.names[i] for i in self.order]
@@ -58,13 +64,27 @@ def solve(
     max_iters: int = 50,
     node_kwargs: dict | None = None,
     order_kwargs: dict | None = None,
+    n_workers: int = 1,
+    max_entry_bytes: float | None = None,
 ) -> Plan:
-    """Solve S/C Opt with alternating optimization (Algorithm 2)."""
+    """Solve S/C Opt with alternating optimization (Algorithm 2).
+
+    ``n_workers=k`` makes every feasibility check (and the MKP resident-set
+    constraints) use the k-worker worst-case residency windows, so the
+    returned plan stays within budget under any interleaving the execution
+    engine can produce with k compute workers (DESIGN.md §2).
+    ``max_entry_bytes`` caps single flagged entries below the aggregate
+    budget (e.g. one cluster node's catalog share).
+    """
     t_start = time.perf_counter()
     nodes_fn = NODE_SOLVERS[node_solver]
     order_fn = ORDER_SOLVERS[order_solver]
-    node_kwargs = node_kwargs or {}
+    node_kwargs = dict(node_kwargs or {})
     order_kwargs = order_kwargs or {}
+    n_workers = max(int(n_workers), 1)
+    node_kwargs.setdefault("n_workers", n_workers)
+    if max_entry_bytes is not None:
+        node_kwargs.setdefault("max_entry_bytes", max_entry_bytes)
 
     tau = list(init_order) if init_order is not None else graph.topological_order()
     if not graph.is_topological(tau):
@@ -81,21 +101,24 @@ def solve(
         flagged, score = u_new, new_score
         tau_new = order_fn(graph, flagged, **order_kwargs)
         if not graph.is_topological(tau_new) or not graph.is_feasible(
-            flagged, tau_new, budget
+            flagged, tau_new, budget, n_workers
         ):
             break  # keep previous feasible order (paper §V-B last paragraph)
         tau = tau_new
 
     # Invariant: the returned plan is always feasible.
-    assert graph.is_feasible(flagged, tau, budget), "altopt produced infeasible plan"
+    assert graph.is_feasible(
+        flagged, tau, budget, n_workers
+    ), "altopt produced infeasible plan"
     return Plan(
         order=tuple(tau),
         flagged=flagged,
         score=score,
-        peak_memory=graph.peak_memory(flagged, tau),
+        peak_memory=graph.peak_memory(flagged, tau, n_workers),
         avg_memory=graph.avg_memory(flagged, tau),
         iterations=iters,
         solve_seconds=time.perf_counter() - t_start,
+        n_workers=n_workers,
     )
 
 

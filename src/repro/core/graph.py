@@ -19,6 +19,15 @@ Core semantics implemented here, exactly as defined in the paper:
   capacity constraints.
 * peak memory usage  = max_i  sum_{j in V_i ∩ U} s_j          (constraint)
 * average memory usage = (1/n) sum_{i in U} (lc(i)-pos[i])·s_i (Opt-Order obj.)
+
+Concurrency extension (DESIGN.md §2): under the execution engine's k-worker
+discipline (in-order issue, out-of-order completion, and a window constraint —
+``order[i]`` may start only once ``order[i-k]`` has completed), a flagged
+node's residency is contained in steps ``[pos(j), lc(j) + k - 1]``: its last
+child may still be running while up to ``k-1`` later nodes complete and admit
+their outputs. Every residency/feasibility query below therefore accepts
+``n_workers``; ``n_workers=1`` reduces exactly to the paper's serial
+definitions.
 """
 from __future__ import annotations
 
@@ -102,21 +111,35 @@ class MVGraph:
             for i in range(self.n)
         ]
 
+    def release_pos(self, order: Sequence[int], n_workers: int = 1) -> list[int]:
+        """Latest step at which node i can still be catalog-resident.
+
+        Serial (``n_workers=1``): its last child's step. With k workers the
+        window discipline lets i's last child stay in flight while up to k-1
+        later nodes complete, so residency extends to ``lc(i) + k - 1``.
+        """
+        lc = self.last_child_pos(order)
+        slack = max(int(n_workers), 1) - 1
+        return [min(p + slack, self.n - 1) for p in lc]
+
     # -- memory accounting ----------------------------------------------------
     def residency_profile(
-        self, flagged: Iterable[int], order: Sequence[int]
+        self, flagged: Iterable[int], order: Sequence[int], n_workers: int = 1
     ) -> list[float]:
-        """Bytes of flagged data resident in the catalog at each step."""
+        """Bytes of flagged data resident in the catalog at each step (worst
+        case over k-worker interleavings when ``n_workers > 1``)."""
         pos = positions(order)
-        lc = self.last_child_pos(order)
+        rel = self.release_pos(order, n_workers)
         prof = [0.0] * self.n
         for i in set(flagged):
-            for k in range(pos[i], lc[i] + 1):
+            for k in range(pos[i], rel[i] + 1):
                 prof[k] += self.sizes[i]
         return prof
 
-    def peak_memory(self, flagged: Iterable[int], order: Sequence[int]) -> float:
-        prof = self.residency_profile(flagged, order)
+    def peak_memory(
+        self, flagged: Iterable[int], order: Sequence[int], n_workers: int = 1
+    ) -> float:
+        prof = self.residency_profile(flagged, order, n_workers)
         return max(prof) if prof else 0.0
 
     def avg_memory(self, flagged: Iterable[int], order: Sequence[int]) -> float:
@@ -128,24 +151,31 @@ class MVGraph:
         )
 
     def is_feasible(
-        self, flagged: Iterable[int], order: Sequence[int], budget: float
+        self,
+        flagged: Iterable[int],
+        order: Sequence[int],
+        budget: float,
+        n_workers: int = 1,
     ) -> bool:
-        return self.peak_memory(flagged, order) <= budget + 1e-9
+        return self.peak_memory(flagged, order, n_workers) <= budget + 1e-9
 
     def total_score(self, flagged: Iterable[int]) -> float:
         return sum(self.scores[i] for i in set(flagged))
 
     # -- resident sets (MKP constraints) --------------------------------------
     def resident_sets(
-        self, order: Sequence[int], exclude: frozenset[int] = frozenset()
+        self,
+        order: Sequence[int],
+        exclude: frozenset[int] = frozenset(),
+        n_workers: int = 1,
     ) -> list[frozenset[int]]:
         """V_i for every step, restricted to non-excluded candidate nodes.
 
         Computed with a single linear scan (paper: GetConstraints is linear):
-        nodes enter at their own step and leave after their last child's step.
+        nodes enter at their own step and leave after their release step
+        (last child's step, plus the ``n_workers - 1`` window slack).
         """
-        pos = positions(order)
-        lc = self.last_child_pos(order)
+        lc = self.release_pos(order, n_workers)
         leave_at: list[list[int]] = [[] for _ in range(self.n)]
         for i in range(self.n):
             if i not in exclude:

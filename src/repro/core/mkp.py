@@ -47,9 +47,15 @@ def get_constraints(
     budget: float,
     order: Sequence[int],
     exclude: frozenset[int],
+    n_workers: int = 1,
 ) -> list[frozenset[int]]:
-    """Maximal, non-trivial resident-set constraints (paper ``GetConstraints``)."""
-    sets = graph.resident_sets(order, exclude)
+    """Maximal, non-trivial resident-set constraints (paper ``GetConstraints``).
+
+    ``n_workers > 1`` widens each node's residency window by the engine's
+    out-of-order completion slack, so the selected flag set stays feasible
+    under every k-worker interleaving (DESIGN.md §2).
+    """
+    sets = graph.resident_sets(order, exclude, n_workers)
     # Deduplicate, drop trivial (cannot be violated even if all flagged).
     uniq: dict[frozenset[int], None] = {}
     for s in sets:
@@ -210,10 +216,18 @@ def simplified_mkp(
     budget: float,
     order: Sequence[int],
     max_expansions: int = 200_000,
+    n_workers: int = 1,
+    max_entry_bytes: float | None = None,
 ) -> frozenset[int]:
-    """The paper's exact node-selection step (Algorithm 1)."""
-    exclude = excluded_nodes(graph, budget)
-    cons = get_constraints(graph, budget, order, exclude)
+    """The paper's exact node-selection step (Algorithm 1).
+
+    ``max_entry_bytes`` additionally excludes any single node larger than
+    that cap — used when ``budget`` is an aggregate over cluster nodes but
+    one entry must still fit a single node's catalog share.
+    """
+    cap = budget if max_entry_bytes is None else min(budget, max_entry_bytes)
+    exclude = excluded_nodes(graph, cap)
+    cons = get_constraints(graph, budget, order, exclude, n_workers)
     v_mkp: set[int] = set().union(*cons) if cons else set()
     if v_mkp:
         res = branch_and_bound_mkp(
@@ -241,17 +255,20 @@ def _flag_incrementally(
     budget: float,
     order: Sequence[int],
     candidates: Sequence[int],
+    n_workers: int = 1,
+    max_entry_bytes: float | None = None,
 ) -> frozenset[int]:
     """Flag candidates one at a time if doing so keeps peak memory ≤ M."""
     pos_order = list(order)
-    lc = graph.last_child_pos(pos_order)
+    lc = graph.release_pos(pos_order, n_workers)
     from .graph import positions
 
     pos = positions(pos_order)
+    cap = budget if max_entry_bytes is None else min(budget, max_entry_bytes)
     prof = [0.0] * graph.n
     chosen: set[int] = set()
     for i in candidates:
-        if graph.sizes[i] > budget or graph.scores[i] <= 0:
+        if graph.sizes[i] > cap or graph.scores[i] <= 0:
             continue
         lo, hi = pos[i], lc[i]
         if max(prof[lo : hi + 1], default=0.0) + graph.sizes[i] <= budget + 1e-9:
@@ -261,27 +278,46 @@ def _flag_incrementally(
     return frozenset(chosen)
 
 
-def greedy_select(graph: MVGraph, budget: float, order: Sequence[int]) -> frozenset[int]:
+def greedy_select(
+    graph: MVGraph,
+    budget: float,
+    order: Sequence[int],
+    n_workers: int = 1,
+    max_entry_bytes: float | None = None,
+) -> frozenset[int]:
     """Iterate nodes in execution order; flag if feasible."""
-    return _flag_incrementally(graph, budget, order, list(order))
+    return _flag_incrementally(
+        graph, budget, order, list(order), n_workers, max_entry_bytes
+    )
 
 
 def random_select(
-    graph: MVGraph, budget: float, order: Sequence[int], seed: int = 0
+    graph: MVGraph,
+    budget: float,
+    order: Sequence[int],
+    seed: int = 0,
+    n_workers: int = 1,
+    max_entry_bytes: float | None = None,
 ) -> frozenset[int]:
     rng = random.Random(seed)
     cand = list(range(graph.n))
     rng.shuffle(cand)
-    return _flag_incrementally(graph, budget, order, cand)
+    return _flag_incrementally(graph, budget, order, cand, n_workers, max_entry_bytes)
 
 
-def ratio_select(graph: MVGraph, budget: float, order: Sequence[int]) -> frozenset[int]:
+def ratio_select(
+    graph: MVGraph,
+    budget: float,
+    order: Sequence[int],
+    n_workers: int = 1,
+    max_entry_bytes: float | None = None,
+) -> frozenset[int]:
     """Ratio-based selection [60]: highest score/size first."""
     cand = sorted(
         range(graph.n),
         key=lambda i: -(graph.scores[i] / max(graph.sizes[i], 1e-12)),
     )
-    return _flag_incrementally(graph, budget, order, cand)
+    return _flag_incrementally(graph, budget, order, cand, n_workers, max_entry_bytes)
 
 
 NodeSolver = Callable[[MVGraph, float, Sequence[int]], frozenset[int]]

@@ -62,10 +62,10 @@ PAPER_COST_MODEL = CostModel()
 # are sequential microbenchmarks; concurrent multi-file Parquet writes +
 # metadata traffic over NFS sustain far less. This derated model is what makes
 # the simulator consistent with the paper's own wall-clock anchors (Table V:
-# 1528s no-opt, 1.63x S/C at 100GB) — see EXPERIMENTS.md §Calibration.
+# 1528s no-opt, ~1.6x S/C at 100GB with the 1.6% catalog) — see DESIGN.md §4.
 EFFECTIVE_NFS_COST_MODEL = CostModel(
-    disk_read_bw=150e6,
-    disk_write_bw=100e6,
+    disk_read_bw=100e6,
+    disk_write_bw=66e6,
     disk_latency=175e-6,
     seq_read_bw=519.8e6,   # base-table scans stay sequential-fast
 )

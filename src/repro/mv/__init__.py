@@ -1,5 +1,6 @@
 """S/C materialization engine: Memory Catalog, storage, Controller, simulator."""
 from .catalog import CatalogOverflowError, MemoryCatalog
+from .engine import ScheduleCore, ThreadedEngine, simulate_events
 from .executor import Controller, InjectedCrash, RunReport, calibrate_sizes
 from .simulator import SimReport, simulate, speedup
 from .storage import DiskStore, table_nbytes
@@ -22,6 +23,9 @@ __all__ = [
     "RunReport",
     "InjectedCrash",
     "calibrate_sizes",
+    "ScheduleCore",
+    "ThreadedEngine",
+    "simulate_events",
     "simulate",
     "speedup",
     "SimReport",

@@ -54,6 +54,20 @@ class MemoryCatalog:
             self._used += size
             self._peak = max(self._peak, self._used)
 
+    def try_put(self, name: str, value: Any, size: float) -> bool:
+        """Atomically admit ``name`` iff it fits; False instead of raising.
+
+        The parallel engine's workers race on admission, so the check and the
+        insert must be one critical section (``fits()`` + ``put()`` is not).
+        """
+        with self._lock:
+            if name in self._entries or self._used + size > self.budget + 1e-9:
+                return False
+            self._entries[name] = (value, size)
+            self._used += size
+            self._peak = max(self._peak, self._used)
+            return True
+
     def get(self, name: str) -> Any:
         with self._lock:
             return self._entries[name][0]

@@ -1,0 +1,474 @@
+"""Unified event-driven execution engine for MV refresh runs.
+
+Both execution paths of the system — the real ``Controller`` (executor.py)
+and the discrete-event simulator (simulator.py) — are thin backends over the
+one scheduling core defined here:
+
+* ``ScheduleCore``    — DAG readiness, the dispatch discipline, and Memory
+                        Catalog admission/residency/release bookkeeping.
+* ``ThreadedEngine``  — real execution: k compute worker threads pull ready
+                        nodes, flagged outputs are admitted to a shared
+                        thread-safe ``MemoryCatalog`` and materialized by a
+                        background writer pool (Fig. 6 write-behind).
+* ``simulate_events`` — discrete-event execution: k virtual compute channels
+                        plus background writer channels advance an event
+                        clock using ``CostModel`` costs instead of wall time.
+
+Dispatch discipline (what makes k-worker feasibility checkable):
+nodes are *issued* strictly in plan order; node ``order[i]`` may start only
+once (a) all of its parents have completed, (b) ``order[i-k]`` has completed
+(the window constraint), and (c) a compute channel is free. Completion is
+out of order. Under this discipline a flagged node's catalog residency is
+contained in plan-order steps ``[pos(v), lc(v) + k - 1]`` — exactly the
+window ``MVGraph.resident_sets(..., n_workers=k)`` charges — so plans from
+``altopt.solve(..., n_workers=k)`` never exceed the byte budget under *any*
+interleaving the engine can produce. With ``k = 1`` the discipline reduces
+to the paper's serial statement stream. See DESIGN.md §1-2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import warnings
+from collections import OrderedDict
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Any, Iterable, Sequence
+
+from ..core.altopt import Plan
+from ..core.speedup import CostModel
+from .catalog import MemoryCatalog
+from .storage import DiskStore, table_nbytes
+from .workloads import Workload
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by tests to simulate a mid-run failure."""
+
+
+def _check_plan_concurrency(plan: Plan, k: int) -> None:
+    """Warn when a plan is executed at higher concurrency than it was solved
+    for: the k-worker residency windows are wider than the ones the solver
+    verified, so the byte-budget guarantee no longer covers this run."""
+    solved_for = getattr(plan, "n_workers", 1)
+    if plan.flagged and solved_for < k:
+        warnings.warn(
+            f"plan was solved for n_workers={solved_for} but is executing on "
+            f"{k} channels; peak catalog usage may exceed the solver's budget "
+            "(re-solve with altopt.solve(..., n_workers=k))",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shared scheduling core
+# ---------------------------------------------------------------------------
+
+class ScheduleCore:
+    """Backend-agnostic scheduling state for one MV refresh run.
+
+    Owns the children/pending bookkeeping both backends used to duplicate:
+    which node may be issued next (in-order issue + window-k + parents
+    complete), and which flagged catalog entries become releasable when a
+    node completes (its parents' last child just finished, or the node
+    itself is childless).
+    """
+
+    def __init__(
+        self,
+        workload: Workload,
+        order: Sequence[int],
+        flagged: Iterable[int],
+        n_workers: int = 1,
+    ):
+        n = workload.n
+        self.order = list(order)
+        if sorted(self.order) != list(range(n)):
+            raise ValueError("plan order must be a permutation of workload nodes")
+        self.workload = workload
+        self.flagged = frozenset(flagged)
+        self.n_workers = max(int(n_workers), 1)
+        self.children: list[list[int]] = [[] for _ in range(n)]
+        for i, node in enumerate(workload.nodes):
+            for p in node.parents:
+                self.children[p].append(i)
+        self.pending_children = [len(c) for c in self.children]
+        self.completed = [False] * n
+        self.issued = [False] * n
+        self.next_issue = 0
+        self.n_done = 0
+
+    @property
+    def n(self) -> int:
+        return len(self.order)
+
+    def done(self) -> bool:
+        return self.n_done == self.n
+
+    def next_ready(self) -> int | None:
+        """Node to issue next, or None (order exhausted / head not ready)."""
+        i = self.next_issue
+        if i >= self.n:
+            return None
+        w = i - self.n_workers
+        if w >= 0 and not self.completed[self.order[w]]:
+            return None  # window: order[i-k] must have completed
+        v = self.order[i]
+        if any(not self.completed[p] for p in self.workload.nodes[v].parents):
+            return None  # in-order issue: wait for the head's parents
+        return v
+
+    def issue(self) -> int:
+        v = self.next_ready()
+        if v is None:
+            raise RuntimeError("issue() called with no dispatchable node")
+        self.issued[v] = True
+        self.next_issue += 1
+        return v
+
+    def complete(self, v: int) -> list[int]:
+        """Mark v complete; return node ids whose catalog entry is now
+        releasable (flagged parents whose last child just completed, plus v
+        itself when flagged and childless)."""
+        if not self.issued[v] or self.completed[v]:
+            raise RuntimeError(f"complete({v}) out of protocol")
+        self.completed[v] = True
+        self.n_done += 1
+        released: list[int] = []
+        for p in self.workload.nodes[v].parents:
+            self.pending_children[p] -= 1
+            if self.pending_children[p] == 0 and p in self.flagged:
+                released.append(p)
+        if v in self.flagged and not self.children[v]:
+            released.append(v)  # childless: free immediately
+        return released
+
+
+# ---------------------------------------------------------------------------
+# Real (threaded) backend
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunReport:
+    elapsed: float
+    peak_catalog_bytes: float
+    catalog_hits: int
+    disk_reads: int
+    overflow_fallbacks: int
+    executed: list[str]
+    skipped: list[str]
+    read_seconds: float
+    write_seconds: float
+    node_seconds: dict[str, float]
+    n_workers: int = 1
+
+
+class _Counters:
+    """Thread-safe hit/miss/overflow tallies shared by compute workers."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.overflow = 0
+
+    def hit(self):
+        with self._lock:
+            self.hits += 1
+
+    def miss(self):
+        with self._lock:
+            self.misses += 1
+
+    def overflowed(self):
+        with self._lock:
+            self.overflow += 1
+
+
+class ThreadedEngine:
+    """Real execution on the shared core: k compute workers + write-behind.
+
+    The coordinator (caller's thread) owns the ``ScheduleCore`` — issuing
+    nodes, processing completions, and releasing catalog entries. Workers
+    gather inputs (catalog hit or storage read), run the node's compute
+    function, and admit/persist the output. A flagged output is created in
+    the catalog and its materialization enqueued on the background writer
+    pool (persistence overlaps downstream compute); an unflagged output — or
+    a flagged one whose true size no longer fits — is written synchronously
+    on the worker's own channel. The run only concludes when every MV is
+    durable on storage (the paper's SLA), crash or no crash.
+    """
+
+    def __init__(
+        self,
+        workload: Workload,
+        store: DiskStore,
+        budget_bytes: float,
+        n_compute_workers: int = 1,
+        n_writers: int = 1,
+    ):
+        self.workload = workload
+        self.store = store
+        self.budget = float(budget_bytes)
+        self.n_compute_workers = max(int(n_compute_workers), 1)
+        self.n_writers = max(int(n_writers), 1)
+
+    def run(
+        self,
+        plan: Plan,
+        resume: bool = False,
+        crash_after: int | None = None,
+    ) -> RunReport:
+        wl = self.workload
+        flagged = frozenset(plan.flagged)
+        _check_plan_concurrency(plan, self.n_compute_workers)
+        core = ScheduleCore(wl, plan.order, flagged, self.n_compute_workers)
+        catalog = MemoryCatalog(self.budget)
+        stats = _Counters()
+        executed: list[str] = []
+        skipped: list[str] = []
+        node_seconds: dict[str, float] = {}
+        write_futures: list[Future] = []
+        wf_lock = threading.Lock()
+        self.store.reset_counters()
+
+        def exec_node(v: int) -> float:
+            node = wl.nodes[v]
+            tn0 = time.perf_counter()
+            inputs: list[Any] = []
+            for p in node.parents:
+                pname = wl.nodes[p].name
+                # A flagged parent stays resident until its last child has
+                # *completed*, so this read can never race its release.
+                if p in flagged and pname in catalog:
+                    inputs.append(catalog.get(pname))
+                    stats.hit()
+                else:
+                    inputs.append(self.store.read(pname))
+                    stats.miss()
+            if node.fn is None:
+                raise ValueError(f"node {node.name} has no compute fn")
+            out = node.fn(inputs)
+            size = table_nbytes(out)
+            if v in flagged and catalog.try_put(node.name, out, size):
+                fut = writer.submit(self.store.write, node.name, out)
+                with wf_lock:
+                    write_futures.append(fut)
+            else:
+                if v in flagged:
+                    stats.overflowed()  # estimate too small; degrade safely
+                self.store.write(node.name, out)
+            return time.perf_counter() - tn0
+
+        def process_completion(v: int) -> None:
+            for r in core.complete(v):
+                catalog.release(wl.nodes[r].name)
+
+        t0 = time.perf_counter()
+        pool = ThreadPoolExecutor(max_workers=self.n_compute_workers)
+        writer = ThreadPoolExecutor(max_workers=self.n_writers)
+        inflight: dict[Future, int] = {}
+        try:
+            while not core.done():
+                while len(inflight) < self.n_compute_workers:
+                    v = core.next_ready()
+                    if v is None:
+                        break
+                    core.issue()
+                    node = wl.nodes[v]
+                    if resume and self.store.exists(node.name):
+                        # already durable from the crashed run: complete it
+                        # instantly so bookkeeping (and releases) advance
+                        skipped.append(node.name)
+                        process_completion(v)
+                        continue
+                    inflight[pool.submit(exec_node, v)] = v
+                if core.done():
+                    break
+                if not inflight:
+                    raise RuntimeError(
+                        "scheduler deadlock: head blocked with nothing in flight"
+                    )
+                done_set, _ = wait(inflight, return_when=FIRST_COMPLETED)
+                for f in done_set:
+                    v = inflight.pop(f)
+                    dt = f.result()
+                    executed.append(wl.nodes[v].name)
+                    node_seconds[wl.nodes[v].name] = dt
+                    process_completion(v)
+                    if crash_after is not None and len(executed) >= crash_after:
+                        raise InjectedCrash(
+                            f"crash injected after {crash_after} nodes"
+                        )
+        finally:
+            # SLA: never conclude (or crash out) with writes in unknown state.
+            # Let in-flight compute finish, then drain the background writer.
+            pool.shutdown(wait=True)
+            for f in list(write_futures):
+                f.result()
+            writer.shutdown(wait=True)
+        elapsed = time.perf_counter() - t0
+        return RunReport(
+            elapsed=elapsed,
+            peak_catalog_bytes=catalog.peak_bytes,
+            catalog_hits=stats.hits,
+            disk_reads=stats.misses,
+            overflow_fallbacks=stats.overflow,
+            executed=executed,
+            skipped=skipped,
+            read_seconds=self.store.read_seconds,
+            write_seconds=self.store.write_seconds,
+            node_seconds=node_seconds,
+            n_workers=self.n_compute_workers,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event backend
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimReport:
+    end_to_end: float
+    compute_seconds: float
+    blocking_read_seconds: float
+    blocking_write_seconds: float
+    background_write_seconds: float
+    peak_catalog_bytes: float
+    catalog_hits: int
+    timeline: list[tuple[str, float, float]]  # (node, start, end) per channel
+    critical_path_seconds: float = 0.0
+    n_workers: int = 1
+
+    @property
+    def table_read_seconds(self) -> float:
+        return self.blocking_read_seconds
+
+
+def simulate_events(
+    workload: Workload,
+    plan: Plan,
+    cost_model: CostModel,
+    mode: str = "sc",
+    n_workers: int = 1,
+    lru_budget: float | None = None,
+    n_writers: int | None = None,
+) -> SimReport:
+    """Discrete-event run over k genuine compute channels.
+
+    Costs come from ``cost_model``; scheduling follows the same
+    ``ScheduleCore`` discipline as the real engine, so ``n_workers=1``
+    reproduces the paper's serial statement stream exactly and ``k > 1``
+    models a k-node cluster (Table V) with per-node blocking I/O and
+    ``n_writers`` background materialization channels (default: one per
+    compute channel — the paper's NFS is not saturated at 5 workers).
+    """
+    wl = workload
+    cm = cost_model
+    k = max(int(n_workers), 1)
+    nw = k if n_writers is None else max(int(n_writers), 1)
+    flagged = frozenset(plan.flagged) if mode == "sc" else frozenset()
+    if mode == "sc":
+        _check_plan_concurrency(plan, k)
+    core = ScheduleCore(wl, plan.order, flagged, k)
+
+    worker_free = [0.0] * k
+    writer_free = [0.0] * nw
+    prev_issue = 0.0  # in-order issue: start times are nondecreasing
+    complete_t = [0.0] * wl.n
+    cp = [0.0] * wl.n  # critical-path completion lower bound
+    compute_total = 0.0
+    blocking_read = 0.0
+    blocking_write = 0.0
+    background_write = 0.0
+    hits = 0
+    timeline: list[tuple[str, float, float]] = []
+    # catalog residency as timed events: (time, kind, delta) with admissions
+    # (kind 0) before releases (kind 1) at equal timestamps, matching the
+    # serial accounting where a node is admitted before its parents release
+    events: list[tuple[float, int, float]] = []
+
+    lru: OrderedDict[int, float] = OrderedDict()
+    lru_bytes = 0.0
+    lru_cap = (lru_budget if lru_budget is not None else 0.0) if mode == "lru" else 0.0
+
+    for i, v in enumerate(core.order):
+        node = wl.nodes[v]
+        core.issue()
+        ch = min(range(k), key=lambda c: worker_free[c])
+        t = max(worker_free[ch], prev_issue)
+        for p in node.parents:
+            t = max(t, complete_t[p])
+        if i >= k:
+            t = max(t, complete_t[core.order[i - k]])  # window constraint
+        start = t
+        prev_issue = t
+        # -- input access (blocks this channel only) -------------------------
+        if node.base_read:
+            dt = cm.read_base(node.base_read)  # base tables: never cached
+            t += dt
+            blocking_read += dt
+        for p in node.parents:
+            psize = wl.nodes[p].size
+            if p in flagged:
+                t += cm.read_mem(psize)
+                hits += 1
+            elif mode == "lru" and p in lru:
+                t += cm.read_mem(psize)
+                lru.move_to_end(p)
+                hits += 1
+            else:
+                dt = cm.read_disk(psize)
+                t += dt
+                blocking_read += dt
+        # -- compute (one full statement on one channel) ----------------------
+        t += node.compute
+        compute_total += node.compute
+        # -- output creation ---------------------------------------------------
+        if v in flagged:
+            t += cm.write_mem(node.size)
+            events.append((t, 0, node.size))
+            wc = min(range(nw), key=lambda c: writer_free[c])
+            wdur = cm.write_disk(node.size)
+            writer_free[wc] = max(t, writer_free[wc]) + wdur
+            background_write += wdur
+        else:
+            dt = cm.write_disk(node.size)
+            t += dt
+            blocking_write += dt
+            if mode == "lru" and node.size <= lru_cap:
+                lru[v] = node.size
+                lru_bytes += node.size
+                while lru_bytes > lru_cap:
+                    _, evicted = lru.popitem(last=False)
+                    lru_bytes -= evicted
+        complete_t[v] = t
+        worker_free[ch] = t
+        timeline.append((node.name, start, t))
+        cp[v] = (t - start) + max((cp[p] for p in node.parents), default=0.0)
+        # -- releases: a flagged node frees when its last child completes ------
+        for r in core.complete(v):
+            rel_t = max(
+                (complete_t[c] for c in core.children[r]), default=complete_t[r]
+            )
+            events.append((rel_t, 1, -wl.nodes[r].size))
+
+    cat_used = cat_peak = 0.0
+    for _, _, delta in sorted(events, key=lambda e: (e[0], e[1])):
+        cat_used += delta
+        cat_peak = max(cat_peak, cat_used)
+
+    end = max(max(complete_t, default=0.0), max(writer_free, default=0.0))
+    return SimReport(
+        end_to_end=end,
+        compute_seconds=compute_total,
+        blocking_read_seconds=blocking_read,
+        blocking_write_seconds=blocking_write,
+        background_write_seconds=background_write,
+        peak_catalog_bytes=cat_peak,
+        catalog_hits=hits,
+        timeline=timeline,
+        critical_path_seconds=max(cp, default=0.0),
+        n_workers=k,
+    )

@@ -1,8 +1,11 @@
 """Controller (paper §III-B/C): executes an MV refresh run under a plan.
 
-For each node in the plan's execution order: gather inputs (from the Memory
-Catalog when the parent is flagged and resident, else from external storage),
-run the node's compute function, then either
+The Controller is a thin facade over the shared execution engine
+(``engine.ThreadedEngine``): k compute worker threads pull ready nodes off
+the plan under the engine's in-order/window-k dispatch discipline. For each
+node: gather inputs (from the Memory Catalog when the parent is flagged and
+resident, else from external storage), run the node's compute function, then
+either
 
 * flagged  → create the output *in the catalog* and enqueue its
   materialization on the background writer (Fig. 6 t2: persistence overlaps
@@ -10,42 +13,27 @@ run the node's compute function, then either
 * unflagged → write it synchronously to storage (the baseline path).
 
 A flagged node is released from the catalog as soon as its last child has
-executed (the background writer keeps a private reference until the file is
+completed (the background writer keeps a private reference until the file is
 durable, so correctness never depends on the catalog copy). The run only
 concludes when every MV is durable on storage — the paper's SLA property.
 
 Crash recovery: the store's manifest records completed materializations
 atomically; ``run(resume=True)`` skips them and recomputes the rest.
+``n_compute_workers=1`` (the default) reproduces the paper's serial
+statement stream exactly; higher values execute independent refresh
+statements concurrently while plans from ``solve(..., n_workers=k)`` keep
+the Memory Catalog within budget (DESIGN.md §2).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any
 
 from ..core.altopt import Plan
-from .catalog import MemoryCatalog
-from .storage import DiskStore, table_nbytes
+from .engine import InjectedCrash, RunReport, ThreadedEngine
+from .storage import DiskStore
 from .workloads import Workload
 
-
-class InjectedCrash(RuntimeError):
-    """Raised by tests to simulate a mid-run failure."""
-
-
-@dataclasses.dataclass
-class RunReport:
-    elapsed: float
-    peak_catalog_bytes: float
-    catalog_hits: int
-    disk_reads: int
-    overflow_fallbacks: int
-    executed: list[str]
-    skipped: list[str]
-    read_seconds: float
-    write_seconds: float
-    node_seconds: dict[str, float]
+__all__ = ["Controller", "InjectedCrash", "RunReport", "calibrate_sizes"]
 
 
 class Controller:
@@ -55,11 +43,13 @@ class Controller:
         store: DiskStore,
         budget_bytes: float,
         n_writers: int = 1,
+        n_compute_workers: int = 1,
     ):
         self.workload = workload
         self.store = store
         self.budget = float(budget_bytes)
         self.n_writers = n_writers
+        self.n_compute_workers = n_compute_workers
 
     def run(
         self,
@@ -67,84 +57,14 @@ class Controller:
         resume: bool = False,
         crash_after: int | None = None,
     ) -> RunReport:
-        wl = self.workload
-        children: list[list[int]] = [[] for _ in range(wl.n)]
-        for i, node in enumerate(wl.nodes):
-            for p in node.parents:
-                children[p].append(i)
-        pending = [len(c) for c in children]
-
-        catalog = MemoryCatalog(self.budget)
-        hits = misses = overflow = 0
-        executed: list[str] = []
-        skipped: list[str] = []
-        node_seconds: dict[str, float] = {}
-        futures: list[Future] = []
-        self.store.reset_counters()
-
-        t0 = time.perf_counter()
-        with ThreadPoolExecutor(max_workers=self.n_writers) as writer:
-            try:
-                for step, v in enumerate(plan.order):
-                    node = wl.nodes[v]
-                    if resume and self.store.exists(node.name):
-                        skipped.append(node.name)
-                        # resumed nodes are on disk; just update bookkeeping
-                        for p in node.parents:
-                            pending[p] -= 1
-                            if pending[p] == 0 and wl.nodes[p].name in catalog:
-                                catalog.release(wl.nodes[p].name)
-                        continue
-                    tn0 = time.perf_counter()
-                    inputs: list[Any] = []
-                    for p in node.parents:
-                        pname = wl.nodes[p].name
-                        if p in plan.flagged and pname in catalog:
-                            inputs.append(catalog.get(pname))
-                            hits += 1
-                        else:
-                            inputs.append(self.store.read(pname))
-                            misses += 1
-                    if node.fn is None:
-                        raise ValueError(f"node {node.name} has no compute fn")
-                    out = node.fn(inputs)
-                    size = table_nbytes(out)
-                    if v in plan.flagged and catalog.fits(size):
-                        catalog.put(node.name, out, size)
-                        futures.append(writer.submit(self.store.write, node.name, out))
-                    else:
-                        if v in plan.flagged:
-                            overflow += 1  # estimate was too small; degrade safely
-                        self.store.write(node.name, out)
-                    executed.append(node.name)
-                    node_seconds[node.name] = time.perf_counter() - tn0
-                    for p in node.parents:
-                        pending[p] -= 1
-                        pname = wl.nodes[p].name
-                        if pending[p] == 0 and pname in catalog:
-                            catalog.release(pname)
-                    if v in plan.flagged and not children[v]:
-                        catalog.release(node.name)  # childless: free immediately
-                    if crash_after is not None and len(executed) >= crash_after:
-                        raise InjectedCrash(f"crash injected after {crash_after} nodes")
-            finally:
-                # SLA: never conclude (or crash out) with writes un-flushed state
-                # unknown — drain the background writer either way.
-                for f in futures:
-                    f.result()
-        elapsed = time.perf_counter() - t0
-        return RunReport(
-            elapsed=elapsed,
-            peak_catalog_bytes=catalog.peak_bytes,
-            catalog_hits=hits,
-            disk_reads=misses,
-            overflow_fallbacks=overflow,
-            executed=executed,
-            skipped=skipped,
-            read_seconds=self.store.read_seconds,
-            write_seconds=self.store.write_seconds,
-            node_seconds=node_seconds,
+        engine = ThreadedEngine(
+            self.workload,
+            self.store,
+            self.budget,
+            n_compute_workers=self.n_compute_workers,
+            n_writers=self.n_writers,
         )
+        return engine.run(plan, resume=resume, crash_after=crash_after)
 
 
 def calibrate_sizes(workload: Workload, store: DiskStore) -> Workload:
@@ -152,19 +72,12 @@ def calibrate_sizes(workload: Workload, store: DiskStore) -> Workload:
     execute serially, record true output sizes into the workload copy."""
     from ..core.altopt import serial_plan
 
-    graph_order = list(range(workload.n))
-    # topological by construction of parents? ensure via graph
-    g = workload.to_graph()
-    order = g.topological_order()
-    ctl = Controller(workload, store, budget_bytes=0.0)
-    plan = serial_plan(g)
-    ctl.run(plan)
+    Controller(workload, store, budget_bytes=0.0).run(
+        serial_plan(workload.to_graph())
+    )
     manifest = store.manifest()
-    new_nodes = []
-    for n in workload.nodes:
-        size = float(manifest.get(n.name, n.size))
-        new_nodes.append(
-            dataclasses.replace(n, size=max(size, 1.0))
-        )
-    del graph_order, order
+    new_nodes = [
+        dataclasses.replace(n, size=max(float(manifest.get(n.name, n.size)), 1.0))
+        for n in workload.nodes
+    ]
     return Workload(name=workload.name, nodes=new_nodes, meta=dict(workload.meta))

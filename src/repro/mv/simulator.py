@@ -1,12 +1,13 @@
 """Discrete-event simulator for paper-scale MV refresh runs (§VI).
 
 The container cannot host 100 GB–1 TB TPC-DS datasets or a Presto cluster, so
-paper-scale experiments (Figs. 9–14, Tables IV–V) run through this simulator:
-one compute channel (the DBMS executes the refresh statements one at a time —
-the paper's serial statement stream) plus a background materialization channel
-(the Fig. 6 write-behind). Per-node costs come from the same CostModel used to
-compute speedup scores; the *real* Controller (executor.py) validates the same
-semantics end-to-end on real data at laptop scale.
+paper-scale experiments (Figs. 9–14, Tables IV–V) run through the shared
+execution engine's discrete-event backend (``engine.simulate_events``):
+``n_workers`` genuine compute channels (each executes whole refresh
+statements, blocking on its own reads/writes) plus background materialization
+channels (the Fig. 6 write-behind). Per-node costs come from the same
+CostModel used to compute speedup scores; the *real* Controller (executor.py)
+validates the same scheduling core end-to-end on real data at laptop scale.
 
 Modes:
 * ``serial`` — no catalog; every read/write blocks (the "No opt" baseline).
@@ -17,28 +18,12 @@ Modes:
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import OrderedDict
-
 from ..core.altopt import Plan
 from ..core.speedup import PAPER_COST_MODEL, CostModel
+from .engine import SimReport, simulate_events
 from .workloads import Workload
 
-
-@dataclasses.dataclass
-class SimReport:
-    end_to_end: float
-    compute_seconds: float
-    blocking_read_seconds: float
-    blocking_write_seconds: float
-    background_write_seconds: float
-    peak_catalog_bytes: float
-    catalog_hits: int
-    timeline: list[tuple[str, float, float]]  # (node, start, end) on compute channel
-
-    @property
-    def table_read_seconds(self) -> float:
-        return self.blocking_read_seconds
+__all__ = ["SimReport", "simulate", "speedup"]
 
 
 def simulate(
@@ -48,95 +33,21 @@ def simulate(
     mode: str = "sc",
     n_workers: int = 1,
     lru_budget: float | None = None,
+    n_writers: int | None = None,
 ) -> SimReport:
-    """Simulate an MV refresh run. ``n_workers`` scales compute throughput
-    (the paper's multi-node Presto cluster, Table V: compute parallelizes,
-    the materialization bandwidth is the shared NFS)."""
-    wl = workload
-    cm = cost_model
-    children: list[list[int]] = [[] for _ in range(wl.n)]
-    for i, node in enumerate(wl.nodes):
-        for p in node.parents:
-            children[p].append(i)
-
-    flagged = set(plan.flagged) if mode == "sc" else set()
-    pending = [len(c) for c in children]
-
-    t = 0.0
-    writer_free = 0.0
-    compute_total = 0.0
-    blocking_read = 0.0
-    blocking_write = 0.0
-    background_write = 0.0
-    cat_used = 0.0
-    cat_peak = 0.0
-    hits = 0
-    timeline: list[tuple[str, float, float]] = []
-
-    lru: OrderedDict[int, float] = OrderedDict()
-    lru_cap = (lru_budget if lru_budget is not None else 0.0) if mode == "lru" else 0.0
-
-    for v in plan.order:
-        node = wl.nodes[v]
-        start = t
-        # -- input access ----------------------------------------------------
-        if node.base_read:
-            dt = cm.read_base(node.base_read)  # base tables: never cached
-            t += dt
-            blocking_read += dt
-        for p in node.parents:
-            psize = wl.nodes[p].size
-            if p in flagged:
-                t += cm.read_mem(psize)
-                hits += 1
-            elif mode == "lru" and p in lru:
-                t += cm.read_mem(psize)
-                lru.move_to_end(p)
-                hits += 1
-            else:
-                dt = cm.read_disk(psize)
-                t += dt
-                blocking_read += dt
-        # -- compute -----------------------------------------------------------
-        c = node.compute / max(n_workers, 1)
-        t += c
-        compute_total += c
-        # -- output creation ----------------------------------------------------
-        if v in flagged:
-            t += cm.write_mem(node.size)
-            cat_used += node.size
-            cat_peak = max(cat_peak, cat_used)
-            ws = max(t, writer_free)
-            wdur = cm.write_disk(node.size)
-            writer_free = ws + wdur
-            background_write += wdur
-        else:
-            dt = cm.write_disk(node.size)
-            t += dt
-            blocking_write += dt
-            if mode == "lru" and node.size <= lru_cap:
-                lru[v] = node.size
-                while sum(lru.values()) > lru_cap:
-                    lru.popitem(last=False)
-        timeline.append((node.name, start, t))
-        # -- release flagged parents whose last child just ran ------------------
-        for p in node.parents:
-            pending[p] -= 1
-            if pending[p] == 0 and p in flagged:
-                cat_used -= wl.nodes[p].size
-        if v in flagged and not children[v]:
-            cat_used -= node.size
-
-    end = max(t, writer_free)
-    return SimReport(
-        end_to_end=end,
-        compute_seconds=compute_total,
-        blocking_read_seconds=blocking_read,
-        blocking_write_seconds=blocking_write,
-        background_write_seconds=background_write,
-        peak_catalog_bytes=cat_peak,
-        catalog_hits=hits,
-        timeline=timeline,
+    """Simulate an MV refresh run on ``n_workers`` compute channels (the
+    paper's multi-node Presto cluster, Table V). Unlike the old
+    compute-division approximation, each channel executes whole statements
+    under the engine's dispatch discipline, so end-to-end time respects both
+    the DAG's critical path and the plan-order memory guarantees."""
+    return simulate_events(
+        workload,
+        plan,
+        cost_model,
+        mode=mode,
+        n_workers=n_workers,
+        lru_budget=lru_budget,
+        n_writers=n_writers,
     )
 
 

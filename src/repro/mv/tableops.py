@@ -37,7 +37,9 @@ def _filter_mask(col: jnp.ndarray, threshold: float, threshold_col: str = "") ->
 
 def op_filter(table: Table, col: str = "c0", threshold: float = 0.0) -> Table:
     if col not in table:
-        col = next(k for k in table if k != "key")
+        col = next((k for k in table if k != "key"), None)
+        if col is None:  # key-only table (e.g. a key-only aggregate upstream)
+            return dict(table)
     mask = np.asarray(_filter_mask(jnp.asarray(table[col]), threshold))
     idx = np.nonzero(mask)[0]
     return {k: np.asarray(v)[idx] for k, v in table.items()}

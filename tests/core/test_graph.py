@@ -68,3 +68,39 @@ def test_subgraph():
     assert sub.n == 3
     assert set(sub.edges) == {(0, 1), (1, 2)}
     assert sub.sizes == (10.0, 2.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# k-worker residency windows (engine dispatch discipline, DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def test_release_pos_extends_by_worker_slack():
+    g = diamond()
+    order = [0, 1, 2, 3]
+    assert g.release_pos(order, n_workers=1) == g.last_child_pos(order)
+    # k=2: each node may stay resident one step past its last child, capped
+    assert g.release_pos(order, n_workers=2) == [3, 3, 3, 3]
+
+
+def test_parallel_residency_is_serial_plus_window():
+    g = diamond()
+    order = [0, 1, 2, 3]
+    # serial: node 0 resident steps 0..2; k=2 extends through step 3
+    assert g.residency_profile({0}, order, n_workers=2) == [10.0] * 4
+    assert g.peak_memory({0, 1}, order, n_workers=2) == 12.0
+    # serial feasibility at 10 bytes no longer holds with the k=2 window
+    assert g.is_feasible({0, 1}, order, 12.0, n_workers=1)
+    assert not g.is_feasible({0, 1}, order, 11.0, n_workers=2)
+
+
+def test_parallel_resident_sets_contain_serial_sets():
+    g = diamond()
+    for order in ([0, 1, 2, 3], [0, 2, 1, 3]):
+        serial = g.resident_sets(order)
+        for k in (2, 3, 4):
+            parallel = g.resident_sets(order, n_workers=k)
+            for s_serial, s_par in zip(serial, parallel):
+                assert s_serial <= s_par
+        # peak memory is monotone in the worker count
+        peaks = [g.peak_memory({0, 1, 2}, order, n_workers=k) for k in (1, 2, 4)]
+        assert peaks == sorted(peaks)

@@ -1,0 +1,189 @@
+"""Unified execution engine: k-worker scheduling, feasibility, crash/resume.
+
+Covers the engine-level guarantees both backends share:
+* the threaded Controller at ``n_compute_workers=1`` reproduces the serial
+  path exactly, and at k>1 produces the same results within budget;
+* crash/resume still satisfies the SLA drain under the threaded engine;
+* simulated k-worker end-to-end time is monotone non-increasing in k and
+  never below the critical-path bound;
+* plans from ``solve(..., n_workers=k)`` stay budget-feasible under every
+  k-worker interleaving the engine can produce (duration-jitter property).
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CostModel, serial_plan, solve
+from repro.mv import (
+    Controller,
+    DiskStore,
+    InjectedCrash,
+    calibrate_sizes,
+    generate_workload,
+    paper_workloads,
+    realize_workload,
+    simulate,
+)
+
+CM = CostModel(
+    disk_read_bw=50e6,
+    disk_write_bw=50e6,
+    mem_read_bw=1e12,
+    mem_write_bw=1e12,
+    disk_latency=0.0,
+)
+
+
+def build(tmp_path, n_nodes=12, seed=3, bytes_per_root=1 << 16):
+    wl = realize_workload(
+        generate_workload(n_nodes=n_nodes, seed=seed), bytes_per_root=bytes_per_root
+    )
+    return calibrate_sizes(wl, DiskStore(tmp_path / "calib"))
+
+
+# ---------------------------------------------------------------------------
+# (a) threaded backend, k=1 ≡ serial path; k>1 same results within budget
+# ---------------------------------------------------------------------------
+
+def test_one_worker_matches_serial_semantics(tmp_path):
+    wl = build(tmp_path)
+    g = wl.to_graph(CM)
+    budget = sum(g.sizes) * 0.4
+    plan = solve(g, budget=budget)
+    assert plan.flagged
+
+    store = DiskStore(tmp_path / "one")
+    rep = Controller(wl, store, budget, n_compute_workers=1).run(plan)
+    # in-order issue at k=1 is the serial statement stream: execution order
+    # equals the plan order, node for node
+    assert rep.executed == [wl.nodes[v].name for v in plan.order]
+    assert rep.catalog_hits > 0
+    assert rep.peak_catalog_bytes <= budget + 1e-9
+    assert set(store.manifest()) == {n.name for n in wl.nodes}
+
+
+def test_parallel_run_equals_serial_run(tmp_path):
+    """k workers: same executed-node set, same catalog hits, and a bitwise
+    identical durable manifest as the k=1 path."""
+    wl = build(tmp_path)
+    g = wl.to_graph(CM)
+    budget = sum(g.sizes) * 0.4
+    plan = solve(g, budget=budget, n_workers=3)
+    assert plan.flagged
+
+    s1 = DiskStore(tmp_path / "serial1")
+    r1 = Controller(wl, s1, budget, n_compute_workers=1).run(plan)
+    s3 = DiskStore(tmp_path / "par3")
+    r3 = Controller(wl, s3, budget, n_compute_workers=3).run(plan)
+
+    assert set(r3.executed) == set(r1.executed)
+    assert r3.catalog_hits == r1.catalog_hits
+    assert r3.overflow_fallbacks == 0
+    assert r3.peak_catalog_bytes <= budget + 1e-9
+    assert s3.manifest() == s1.manifest()
+    for n in wl.nodes:
+        a, b = s1.read(n.name), s3.read(n.name)
+        assert set(a) == set(b)
+        for col in a:
+            np.testing.assert_array_equal(a[col], b[col])
+
+
+def test_parallel_controller_respects_budget_on_paper_workloads(tmp_path):
+    """Acceptance: the parallel Controller never exceeds budget_bytes in
+    peak_catalog_bytes on the realized paper workloads."""
+    for wi, wl in enumerate(paper_workloads(100.0)):
+        wl = realize_workload(wl, bytes_per_root=1 << 14, seed=wi)
+        wl = calibrate_sizes(wl, DiskStore(tmp_path / f"calib{wi}"))
+        g = wl.to_graph(CM)
+        budget = sum(g.sizes) * 0.3
+        plan = solve(g, budget=budget, n_workers=3)
+        store = DiskStore(tmp_path / f"run{wi}")
+        rep = Controller(wl, store, budget, n_compute_workers=3).run(plan)
+        assert rep.peak_catalog_bytes <= budget + 1e-9, wl.name
+        assert set(store.manifest()) == {n.name for n in wl.nodes}
+
+
+# ---------------------------------------------------------------------------
+# (b) crash/resume under the threaded engine
+# ---------------------------------------------------------------------------
+
+def test_parallel_crash_then_resume_completes(tmp_path):
+    wl = build(tmp_path, n_nodes=14, seed=9)
+    g = wl.to_graph(CM)
+    budget = sum(g.sizes) * 0.4
+    plan = solve(g, budget=budget, n_workers=2)
+
+    store = DiskStore(tmp_path / "crash")
+    ctl = Controller(wl, store, budget, n_compute_workers=2)
+    with pytest.raises(InjectedCrash):
+        ctl.run(plan, crash_after=5)
+    # SLA drain: everything that executed before the crash is durable
+    done_before = set(store.manifest())
+    assert len(done_before) >= 5
+
+    rep = ctl.run(plan, resume=True)
+    assert set(store.manifest()) == {n.name for n in wl.nodes}
+    assert set(rep.skipped) == done_before
+    assert set(rep.executed) | set(rep.skipped) == {n.name for n in wl.nodes}
+
+    clean = DiskStore(tmp_path / "clean")
+    Controller(wl, clean, budget).run(plan)
+    for n in wl.nodes:
+        a, b = store.read(n.name), clean.read(n.name)
+        for col in a:
+            np.testing.assert_array_equal(a[col], b[col])
+
+
+# ---------------------------------------------------------------------------
+# (c) simulator: monotone in k, never below the critical path
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sim_monotone_in_workers_and_critical_path_bound(seed):
+    wl = generate_workload(n_nodes=18, seed=seed)
+    g = wl.to_graph(CM)
+    plan = solve(g, budget=sum(g.sizes) * 0.3, n_workers=8)
+    prev = None
+    for k in (1, 2, 3, 4, 6, 8):
+        rep = simulate(wl, plan, CM, mode="sc", n_workers=k)
+        assert rep.end_to_end >= rep.critical_path_seconds - 1e-9
+        if prev is not None:
+            assert rep.end_to_end <= prev + 1e-6, f"k={k} slower than k-1 step"
+        prev = rep.end_to_end
+        ser = simulate(wl, serial_plan(g), CM, mode="serial", n_workers=k)
+        assert ser.end_to_end >= ser.critical_path_seconds - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# (d) plans are feasible under every k-worker interleaving
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5))
+def test_plan_feasible_under_any_interleaving(seed, k):
+    """Duration jitter explores the engine's out-of-order completions: the
+    admission/release pattern changes, but the window residency bound — and
+    so the budget — must hold for every realization."""
+    wl = generate_workload(n_nodes=14, seed=seed)
+    g = wl.to_graph(CM)
+    budget = sum(g.sizes) * 0.35
+    plan = solve(g, budget=budget, n_workers=k)
+    bound = g.peak_memory(plan.flagged, list(plan.order), k)
+    assert bound <= budget + 1e-6
+    rng = random.Random(seed)
+    for _ in range(8):
+        jittered = dataclasses.replace(
+            wl,
+            nodes=[
+                dataclasses.replace(n, compute=n.compute * rng.uniform(0.01, 100.0))
+                for n in wl.nodes
+            ],
+        )
+        rep = simulate(jittered, plan, CM, mode="sc", n_workers=k)
+        assert rep.peak_catalog_bytes <= bound + 1e-6
+        assert rep.peak_catalog_bytes <= budget + 1e-6

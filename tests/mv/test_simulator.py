@@ -97,11 +97,14 @@ def test_sc_never_slower_than_serial(seed):
 
 @settings(max_examples=15, deadline=None)
 @given(st.integers(0, 10_000))
-def test_more_workers_scale_compute_only(seed):
+def test_more_workers_add_channels_not_less_work(seed):
+    """k workers are genuine compute channels: the total work is invariant,
+    only the end-to-end time (weakly) improves."""
     wl = generate_workload(n_nodes=12, seed=seed)
     g = wl.to_graph(CM)
-    plan = solve(g, budget=sum(g.sizes) * 0.2)
+    plan = solve(g, budget=sum(g.sizes) * 0.2, n_workers=4)
     one = simulate(wl, plan, CM, mode="sc", n_workers=1)
     four = simulate(wl, plan, CM, mode="sc", n_workers=4)
     assert four.end_to_end <= one.end_to_end + 1e-9
-    assert four.compute_seconds == pytest.approx(one.compute_seconds / 4)
+    assert four.compute_seconds == pytest.approx(one.compute_seconds)
+    assert four.end_to_end >= four.critical_path_seconds - 1e-9
