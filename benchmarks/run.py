@@ -1,9 +1,11 @@
 """Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
 
-Runs every paper-figure benchmark (Figs. 9–14, Tables IV–V), the real-executor
-wall-clock validation, and the roofline report from whatever dry-run records
-exist. ``--quick`` trims sweep sizes. Exit code is non-zero if any module
-raises."""
+Runs every paper-figure benchmark (Figs. 9–14, Tables IV–V), the
+full-vs-incremental update comparison, the real-executor wall-clock
+validation, and the roofline report from whatever dry-run records exist.
+``--quick`` trims sweep sizes; ``--smoke`` runs only the fast
+scenario-regression subset (the incremental benchmark, in quick mode) for
+CI. Exit code is non-zero if any module raises."""
 from __future__ import annotations
 
 import argparse
@@ -16,6 +18,7 @@ from . import (
     fig12_ablation,
     fig13_opttime,
     fig14_sweep,
+    incremental,
     parallel_sweep,
     real_executor,
     roofline,
@@ -30,22 +33,34 @@ MODULES = [
     ("fig12_ablation", fig12_ablation.run),
     ("table5_cluster", table5_cluster.run),
     ("parallel_sweep", parallel_sweep.run),
+    ("incremental", incremental.run),
     ("fig13_opttime", fig13_opttime.run),
     ("fig14_sweep", fig14_sweep.run),
     ("real_executor", real_executor.run),
     ("roofline", lambda quick: roofline.run(mesh="single", quick=quick)),
 ]
 
+# scenario-regression gate for CI: fast, asserts the paper-shaped invariants
+# (incremental < full per refresh round, S/C > 1x in both modes, bitwise
+# identity of incremental vs full recompute on the real executor)
+SMOKE_MODULES = ["incremental"]
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset (implies --quick)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.quick = True
 
     failures = []
     for name, fn in MODULES:
         if args.only and args.only not in name:
+            continue
+        if args.smoke and name not in SMOKE_MODULES:
             continue
         print(f"\n{'='*72}\n[benchmarks] {name}\n{'='*72}")
         t0 = time.perf_counter()

@@ -1,15 +1,27 @@
-"""S/C materialization engine: Memory Catalog, storage, Controller, simulator."""
+"""S/C materialization engine: Memory Catalog, storage, Controller, simulator,
+and the incremental (full-vs-incremental update) refresh subsystem."""
 from .catalog import CatalogOverflowError, MemoryCatalog
 from .engine import ScheduleCore, ThreadedEngine, simulate_events
 from .executor import Controller, InjectedCrash, RunReport, calibrate_sizes
+from .incremental import (
+    IncrementalEngine,
+    RoundReport,
+    ScenarioReport,
+    SimScenarioReport,
+    run_scenario,
+    simulate_scenario,
+    verify_scenario_equivalence,
+)
 from .simulator import SimReport, simulate, speedup
 from .storage import DiskStore, table_nbytes
 from .workloads import (
     MVNode,
     PAPER_WORKLOAD_SPECS,
     TPCDS_100GB_TABLES,
+    UpdateSpec,
     Workload,
     generate_workload,
+    incremental_view,
     paper_workloads,
     realize_workload,
 )
@@ -26,12 +38,21 @@ __all__ = [
     "ScheduleCore",
     "ThreadedEngine",
     "simulate_events",
+    "IncrementalEngine",
+    "RoundReport",
+    "ScenarioReport",
+    "SimScenarioReport",
+    "run_scenario",
+    "simulate_scenario",
+    "verify_scenario_equivalence",
     "simulate",
     "speedup",
     "SimReport",
     "Workload",
     "MVNode",
+    "UpdateSpec",
     "generate_workload",
+    "incremental_view",
     "paper_workloads",
     "realize_workload",
     "PAPER_WORKLOAD_SPECS",

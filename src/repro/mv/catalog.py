@@ -83,6 +83,15 @@ class MemoryCatalog:
                 self._used -= size
 
     def clear(self) -> None:
+        """Drop every entry and reset statistics. A reused catalog (the
+        engine's restart path, crash/resume, multi-round refresh) must not
+        report the previous run's peak."""
         with self._lock:
             self._entries.clear()
             self._used = 0.0
+            self._peak = 0.0
+
+    def reset_stats(self) -> None:
+        """Reset statistics (peak) without dropping resident entries."""
+        with self._lock:
+            self._peak = self._used

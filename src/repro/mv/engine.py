@@ -186,6 +186,18 @@ class _Counters:
             self.overflow += 1
 
 
+@dataclasses.dataclass
+class _RunState:
+    """Per-run shared state handed to worker threads."""
+
+    catalog: MemoryCatalog
+    stats: _Counters
+    writer: ThreadPoolExecutor
+    write_futures: list[Future]
+    wf_lock: threading.Lock
+    flagged: frozenset[int]
+
+
 class ThreadedEngine:
     """Real execution on the shared core: k compute workers + write-behind.
 
@@ -198,6 +210,15 @@ class ThreadedEngine:
     a flagged one whose true size no longer fits — is written synchronously
     on the worker's own channel. The run only concludes when every MV is
     durable on storage (the paper's SLA), crash or no crash.
+
+    Node execution is factored into overridable hooks (``_skip_node``,
+    ``_exec_node``, ``_gather_input``, ``_publish``) so refresh disciplines
+    other than build-from-scratch — notably the incremental engine
+    (``mv.incremental``) — reuse the scheduling/admission/SLA machinery
+    unchanged. The Memory Catalog object is owned by the engine and shared
+    across ``run`` calls (multi-round refresh, crash/resume restarts);
+    contents are per-run — each run starts by clearing it, which also
+    resets the peak statistic.
     """
 
     def __init__(
@@ -213,7 +234,45 @@ class ThreadedEngine:
         self.budget = float(budget_bytes)
         self.n_compute_workers = max(int(n_compute_workers), 1)
         self.n_writers = max(int(n_writers), 1)
+        self.catalog = MemoryCatalog(self.budget)
 
+    # -- overridable execution hooks ----------------------------------------
+    def _skip_node(self, v: int, resume: bool) -> bool:
+        """True when node v need not execute this run (already durable)."""
+        return resume and self.store.exists(self.workload.nodes[v].name)
+
+    def _gather_input(self, p: int, rt: _RunState) -> Any:
+        pname = self.workload.nodes[p].name
+        # A flagged parent stays resident until its last child has
+        # *completed*, so this read can never race its release.
+        if p in rt.flagged and pname in rt.catalog:
+            rt.stats.hit()
+            return rt.catalog.get(pname)
+        rt.stats.miss()
+        return self.store.read(pname)
+
+    def _publish(self, v: int, out: Any, rt: _RunState) -> None:
+        node = self.workload.nodes[v]
+        size = table_nbytes(out)
+        if v in rt.flagged and rt.catalog.try_put(node.name, out, size):
+            fut = rt.writer.submit(self.store.write, node.name, out)
+            with rt.wf_lock:
+                rt.write_futures.append(fut)
+        else:
+            if v in rt.flagged:
+                rt.stats.overflowed()  # estimate too small; degrade safely
+            self.store.write(node.name, out)
+
+    def _exec_node(self, v: int, rt: _RunState) -> float:
+        node = self.workload.nodes[v]
+        tn0 = time.perf_counter()
+        inputs = [self._gather_input(p, rt) for p in node.parents]
+        if node.fn is None:
+            raise ValueError(f"node {node.name} has no compute fn")
+        self._publish(v, node.fn(inputs), rt)
+        return time.perf_counter() - tn0
+
+    # -- coordinator ---------------------------------------------------------
     def run(
         self,
         plan: Plan,
@@ -224,50 +283,31 @@ class ThreadedEngine:
         flagged = frozenset(plan.flagged)
         _check_plan_concurrency(plan, self.n_compute_workers)
         core = ScheduleCore(wl, plan.order, flagged, self.n_compute_workers)
-        catalog = MemoryCatalog(self.budget)
+        # restart path: the engine-owned catalog is reused across rounds and
+        # resume attempts — clear() drops stale entries and resets the peak
+        # statistic (reset_stats() alone keeps residents)
+        self.catalog.clear()
         stats = _Counters()
         executed: list[str] = []
         skipped: list[str] = []
         node_seconds: dict[str, float] = {}
-        write_futures: list[Future] = []
-        wf_lock = threading.Lock()
         self.store.reset_counters()
-
-        def exec_node(v: int) -> float:
-            node = wl.nodes[v]
-            tn0 = time.perf_counter()
-            inputs: list[Any] = []
-            for p in node.parents:
-                pname = wl.nodes[p].name
-                # A flagged parent stays resident until its last child has
-                # *completed*, so this read can never race its release.
-                if p in flagged and pname in catalog:
-                    inputs.append(catalog.get(pname))
-                    stats.hit()
-                else:
-                    inputs.append(self.store.read(pname))
-                    stats.miss()
-            if node.fn is None:
-                raise ValueError(f"node {node.name} has no compute fn")
-            out = node.fn(inputs)
-            size = table_nbytes(out)
-            if v in flagged and catalog.try_put(node.name, out, size):
-                fut = writer.submit(self.store.write, node.name, out)
-                with wf_lock:
-                    write_futures.append(fut)
-            else:
-                if v in flagged:
-                    stats.overflowed()  # estimate too small; degrade safely
-                self.store.write(node.name, out)
-            return time.perf_counter() - tn0
 
         def process_completion(v: int) -> None:
             for r in core.complete(v):
-                catalog.release(wl.nodes[r].name)
+                self.catalog.release(wl.nodes[r].name)
 
         t0 = time.perf_counter()
         pool = ThreadPoolExecutor(max_workers=self.n_compute_workers)
         writer = ThreadPoolExecutor(max_workers=self.n_writers)
+        rt = _RunState(
+            catalog=self.catalog,
+            stats=stats,
+            writer=writer,
+            write_futures=[],
+            wf_lock=threading.Lock(),
+            flagged=flagged,
+        )
         inflight: dict[Future, int] = {}
         try:
             while not core.done():
@@ -277,13 +317,14 @@ class ThreadedEngine:
                         break
                     core.issue()
                     node = wl.nodes[v]
-                    if resume and self.store.exists(node.name):
-                        # already durable from the crashed run: complete it
-                        # instantly so bookkeeping (and releases) advance
+                    if self._skip_node(v, resume):
+                        # already durable (resume) or untouched this round
+                        # (static): complete it instantly so bookkeeping
+                        # (and releases) advance
                         skipped.append(node.name)
                         process_completion(v)
                         continue
-                    inflight[pool.submit(exec_node, v)] = v
+                    inflight[pool.submit(self._exec_node, v, rt)] = v
                 if core.done():
                     break
                 if not inflight:
@@ -305,13 +346,13 @@ class ThreadedEngine:
             # SLA: never conclude (or crash out) with writes in unknown state.
             # Let in-flight compute finish, then drain the background writer.
             pool.shutdown(wait=True)
-            for f in list(write_futures):
+            for f in list(rt.write_futures):
                 f.result()
             writer.shutdown(wait=True)
         elapsed = time.perf_counter() - t0
         return RunReport(
             elapsed=elapsed,
-            peak_catalog_bytes=catalog.peak_bytes,
+            peak_catalog_bytes=self.catalog.peak_bytes,
             catalog_hits=stats.hits,
             disk_reads=stats.misses,
             overflow_fallbacks=stats.overflow,

@@ -1,0 +1,431 @@
+"""Incremental MV refresh: multi-round full-vs-incremental scenarios
+(DESIGN.md §5).
+
+The paper's experiment matrix runs every workload under both *full* and
+*incremental* updates. This module executes that axis end to end on both
+engine backends:
+
+* ``run_scenario``      — real execution. Round 0 is the initial build; each
+  later round ingests an insert-only delta at every ingesting scan and
+  refreshes the DAG under the round's re-solved plan. Under
+  ``mode="incremental"`` the delta-propagating operators (tableops module
+  docstring) refresh from their input deltas — short-circuited deltas are
+  held in the Memory Catalog, appends cost delta bytes on storage — while
+  merge/fallback operators rewrite. Under ``mode="full"`` every non-scan
+  node recomputes from its complete inputs. Both modes produce bitwise
+  identical stored MVs (``verify_scenario_equivalence``).
+* ``simulate_scenario`` — paper-scale discrete-event counterpart: each
+  round's refresh view (``incremental_view``) runs through
+  ``engine.simulate_events`` with a freshly solved plan.
+
+Per-round refresh statuses (``core.speedup``): STATIC nodes (untouched
+subtrees) are skipped entirely; APPENDED nodes emit an insert-only delta
+(``new = old ++ delta``); REPLACED nodes rewrite their output and force
+their children to full recomputation. A JOIN predicted APPENDED falls back
+to REPLACED at runtime when a right-side delta introduces new join keys —
+the one data-dependent case the analytic model cannot see.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Sequence
+
+import numpy as np
+
+from ..core.altopt import Plan, serial_plan, solve
+from ..core.speedup import APPENDED, REPLACED, STATIC, CostModel
+from . import tableops as T
+from .engine import RunReport, SimReport, ThreadedEngine, _RunState, simulate_events
+from .storage import DiskStore, table_nbytes
+from .workloads import UpdateSpec, Workload, incremental_view
+
+
+# ---------------------------------------------------------------------------
+# Real (threaded) incremental engine
+# ---------------------------------------------------------------------------
+
+class IncrementalEngine(ThreadedEngine):
+    """ThreadedEngine with per-round delta refresh semantics.
+
+    One instance drives a whole scenario: the Memory Catalog is engine-owned
+    and reused round to round (cleared per run — the restart path), the
+    schema cache lets static parents contribute typed empty deltas, and
+    ``configure_round`` snapshots the store's part counts so "old content"
+    (parts before this round) and "this round's delta" (parts after) stay
+    well-defined under write-behind.
+    """
+
+    def __init__(self, workload: Workload, store: DiskStore, budget_bytes: float,
+                 spec: UpdateSpec, **kw):
+        super().__init__(workload, store, budget_bytes, **kw)
+        self.spec = spec
+        self.round_idx = 0
+        self.statuses: dict[int, str] = {}
+        self.schemas: dict[str, dict[str, np.dtype]] = {}
+        self._parts0: dict[str, int] = {}
+        self._static: frozenset[int] = frozenset()
+        self._fb_lock = threading.Lock()
+        self.join_fallbacks = 0
+
+    def configure_round(self, round_idx: int, static: Sequence[int] = ()) -> None:
+        self.round_idx = round_idx
+        self._static = frozenset(static)
+        self.statuses = {v: STATIC for v in self._static}
+        self._parts0 = {
+            n.name: self.store.parts(n.name) for n in self.workload.nodes
+        }
+        self.join_fallbacks = 0
+
+    # -- hooks ---------------------------------------------------------------
+    def _skip_node(self, v: int, resume: bool) -> bool:
+        if v in self._static:
+            return True  # untouched subtree: previous output is still exact
+        return super()._skip_node(v, resume)
+
+    def _exec_node(self, v: int, rt: _RunState) -> float:
+        node = self.workload.nodes[v]
+        tn0 = time.perf_counter()
+        r = self.round_idx
+        if not node.parents:
+            # ingestion is an append in *every* mode (round 0 = initial load)
+            if node.delta_fn is None:
+                raise ValueError(f"scan {node.name} has no delta_fn")
+            self._publish_append(v, node.delta_fn(r, self.spec.ingest_frac), rt)
+            return time.perf_counter() - tn0
+        pstat = [self.statuses[p] for p in node.parents]
+        if r == 0 or self.spec.mode == "full" or REPLACED in pstat:
+            self._refresh_full(v, rt)
+        else:
+            self._refresh_delta(v, rt)
+        return time.perf_counter() - tn0
+
+    # -- input access ---------------------------------------------------------
+    def _delta_input(self, p: int, rt: _RunState) -> T.Table:
+        """This round's insert-only delta of parent ``p`` (APPENDED/STATIC)."""
+        pname = self.workload.nodes[p].name
+        if self.statuses[p] == STATIC:
+            return T.empty_like(self.schemas[pname])
+        if p in rt.flagged and pname in rt.catalog:
+            rt.stats.hit()
+            return rt.catalog.get(pname)
+        rt.stats.miss()
+        return self.store.read_parts(pname, self._parts0[pname])
+
+    def _old_input(self, p: int) -> T.Table:
+        """Parent ``p``'s content as of the end of the previous round."""
+        return self.store.read_parts(
+            self.workload.nodes[p].name, 0, self._parts0[self.workload.nodes[p].name]
+        )
+
+    def _gather_input(self, p: int, rt: _RunState) -> Any:
+        """Full current content of parent ``p``, whatever its status."""
+        pname = self.workload.nodes[p].name
+        status = self.statuses[p]
+        if status == APPENDED and p in rt.flagged and pname in rt.catalog:
+            # catalog holds only the delta; historical parts come from disk
+            rt.stats.hit()
+            delta = rt.catalog.get(pname)
+            if self._parts0[pname] == 0:
+                return delta  # first round: the delta is the whole table
+            rt.stats.miss()
+            return T.concat_tables([self._old_input(p), delta])
+        return super()._gather_input(p, rt)
+
+    # -- output publication ----------------------------------------------------
+    def _remember_schema(self, name: str, out: T.Table) -> None:
+        if out:
+            self.schemas[name] = T.table_schema(out)
+
+    def _rows(self, out: T.Table) -> int:
+        return len(next(iter(out.values()))) if out else 0
+
+    def _publish_append(self, v: int, delta: T.Table, rt: _RunState) -> None:
+        node = self.workload.nodes[v]
+        self._remember_schema(node.name, delta)
+        if self._rows(delta) == 0:
+            self.statuses[v] = STATIC  # empty delta: output is unchanged
+            return
+        self.statuses[v] = APPENDED
+        size = table_nbytes(delta)
+        if v in rt.flagged and rt.catalog.try_put(node.name, delta, size):
+            fut = rt.writer.submit(self.store.append, node.name, delta)
+            with rt.wf_lock:
+                rt.write_futures.append(fut)
+        else:
+            if v in rt.flagged:
+                rt.stats.overflowed()
+            self.store.append(node.name, delta)
+
+    def _publish_replace(self, v: int, out: T.Table, rt: _RunState) -> None:
+        self.statuses[v] = REPLACED
+        self._remember_schema(self.workload.nodes[v].name, out)
+        self._publish(v, out, rt)  # base behavior: full (replacing) write
+
+    # -- refresh strategies ----------------------------------------------------
+    def _refresh_full(self, v: int, rt: _RunState) -> None:
+        node = self.workload.nodes[v]
+        inputs = [self._gather_input(p, rt) for p in node.parents]
+        self._publish_replace(v, node.fn(inputs), rt)
+
+    def _refresh_delta(self, v: int, rt: _RunState) -> None:
+        node = self.workload.nodes[v]
+        deltas = [self._delta_input(p, rt) for p in node.parents]
+        if all(self._rows(d) == 0 for d in deltas):
+            self.statuses[v] = STATIC  # nothing arrived on any input
+            return
+        if node.op == "JOIN" and len(node.parents) >= 2:
+            self._refresh_join(v, deltas, rt)
+        elif node.op == "UNION" and len(node.parents) >= 2 and any(
+            "rid" not in self.schemas[self.workload.nodes[p].name]
+            for p in node.parents
+        ):
+            # a rid-less input (an AGG-derived side) leaves the union output
+            # without the canonical rid order, so appended deltas would land
+            # at the wrong row positions — recompute fully instead
+            self._refresh_full(v, rt)
+        elif node.op == "AGG":
+            # mergeable partial aggregates: agg the delta, merge exactly into
+            # the previous output (fixed-point sums — tableops docstring)
+            delta_agg = node.fn([deltas[0]])
+            old = self.store.read(node.name)
+            self._publish_replace(v, T.merge_agg(old, delta_agg), rt)
+        else:
+            # FILTER / PROJECT / MAP / UNION: pure delta pass-through; the
+            # node's own compute fn applied to the delta IS the delta rule
+            self._publish_append(v, node.fn(deltas), rt)
+
+    def _full_from_delta(self, p: int, delta: T.Table) -> T.Table:
+        """Parent ``p``'s full current content, assembled from its already-
+        gathered delta without re-reading bytes the caller holds."""
+        if self.statuses[p] == STATIC:
+            return self.store.read(self.workload.nodes[p].name)
+        old = self._old_input(p)
+        return old if self._rows(delta) == 0 else T.concat_tables([old, delta])
+
+    def _refresh_join(self, v: int, deltas: list[T.Table], rt: _RunState) -> None:
+        """Left-driven delta join: Δout = ΔL ⋈ R_new for every right side,
+        valid only while right-side deltas introduce no new keys; otherwise
+        fall back to a full recompute over the same (already assembled)
+        inputs — the outputs of both branches are bitwise identical, the
+        fallback only costs more."""
+        node = self.workload.nodes[v]
+        rights_full: list[T.Table] = []
+        appendable = True
+        for p, dp in zip(node.parents[1:], deltas[1:]):
+            old = self._old_input(p)
+            if appendable and not T.join_delta_is_appendable(old["key"], dp):
+                appendable = False
+            rights_full.append(
+                old if self._rows(dp) == 0 else T.concat_tables([old, dp])
+            )
+        if not appendable:
+            with self._fb_lock:
+                self.join_fallbacks += 1
+            left_full = self._full_from_delta(node.parents[0], deltas[0])
+            self._publish_replace(v, node.fn([left_full] + rights_full), rt)
+            return
+        self._publish_append(v, node.fn([deltas[0]] + rights_full), rt)
+
+
+# ---------------------------------------------------------------------------
+# Scenario drivers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RoundReport:
+    round_idx: int
+    mode: str
+    plan: Plan
+    run: RunReport
+    statuses: dict[str, str]
+    join_fallbacks: int
+
+    @property
+    def elapsed(self) -> float:
+        return self.run.elapsed
+
+
+@dataclasses.dataclass
+class ScenarioReport:
+    workload: str
+    spec: UpdateSpec
+    rounds: list[RoundReport]
+
+    @property
+    def build_seconds(self) -> float:
+        return self.rounds[0].elapsed if self.rounds else 0.0
+
+    @property
+    def refresh_seconds(self) -> float:
+        return sum(r.elapsed for r in self.rounds[1:])
+
+    @property
+    def peak_catalog_bytes(self) -> float:
+        return max((r.run.peak_catalog_bytes for r in self.rounds), default=0.0)
+
+
+def run_scenario(
+    workload: Workload,
+    store: DiskStore,
+    budget_bytes: float,
+    spec: UpdateSpec,
+    cost_model: CostModel,
+    n_compute_workers: int = 1,
+    n_writers: int = 1,
+    optimize: bool = True,
+) -> ScenarioReport:
+    """Execute a multi-round refresh scenario on real data.
+
+    Round 0 builds every MV; rounds ``1..spec.n_rounds`` ingest and refresh
+    under ``spec.mode``. The planner re-solves each round against the
+    round's refresh view, sized from the store manifest (the paper's
+    "metrics from previous runs"); ``optimize=False`` runs every round
+    serially with nothing flagged (the no-opt baseline)."""
+    stale = {n.name for n in workload.nodes} & set(store.manifest())
+    if stale:
+        raise ValueError(
+            f"store already holds {len(stale)} of this workload's MVs "
+            f"(e.g. {sorted(stale)[:3]}); scenarios must start on an empty "
+            "store or round-0 ingestion would append onto stale parts"
+        )
+    engine = IncrementalEngine(
+        workload, store, budget_bytes, spec,
+        n_compute_workers=n_compute_workers, n_writers=n_writers,
+    )
+    rounds: list[RoundReport] = []
+    for r in range(spec.n_rounds + 1):
+        if r == 0:
+            view = workload
+        else:
+            manifest = store.manifest()
+            sizes = [
+                float(manifest.get(n.name, n.size)) or 1.0
+                for n in workload.nodes
+            ]
+            # manifest sizes already include all growth up to round r-1, so
+            # the view is evaluated one round ahead of *current* sizes
+            # (round_idx=1) rather than compounding growth from round 0
+            view = incremental_view(workload, spec, 1, sizes=sizes)
+        g = view.to_graph(cost_model)
+        plan = (
+            solve(g, budget=budget_bytes, n_workers=n_compute_workers)
+            if optimize
+            else serial_plan(g)
+        )
+        statuses = view.meta.get("update", {}).get("statuses", ())
+        static = [i for i, s in enumerate(statuses) if s == STATIC]
+        engine.configure_round(r, static)
+        rep = engine.run(plan)
+        rounds.append(
+            RoundReport(
+                round_idx=r,
+                mode=spec.mode if r else "build",
+                plan=plan,
+                run=rep,
+                statuses={
+                    workload.nodes[v].name: s
+                    for v, s in engine.statuses.items()
+                },
+                join_fallbacks=engine.join_fallbacks,
+            )
+        )
+    return ScenarioReport(workload=workload.name, spec=spec, rounds=rounds)
+
+
+def verify_scenario_equivalence(
+    workload: Workload, store_a: DiskStore, store_b: DiskStore
+) -> None:
+    """Assert every MV is bitwise identical between two scenario stores
+    (incremental vs full recompute — the correctness claim of DESIGN.md §5).
+    Raises AssertionError with the first divergent column."""
+    for node in workload.nodes:
+        a, b = store_a.read(node.name), store_b.read(node.name)
+        if set(a) != set(b):
+            raise AssertionError(
+                f"{node.name}: column sets differ {sorted(a)} != {sorted(b)}"
+            )
+        for col in a:
+            va, vb = np.asarray(a[col]), np.asarray(b[col])
+            if va.dtype != vb.dtype or va.shape != vb.shape or not (
+                va.tobytes() == vb.tobytes()
+            ):
+                raise AssertionError(
+                    f"{node.name}.{col}: not bitwise identical "
+                    f"({va.dtype}{va.shape} vs {vb.dtype}{vb.shape})"
+                )
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event scenarios (paper scale)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimRoundReport:
+    round_idx: int
+    mode: str
+    plan: Plan
+    sim: SimReport
+
+    @property
+    def end_to_end(self) -> float:
+        return self.sim.end_to_end
+
+
+@dataclasses.dataclass
+class SimScenarioReport:
+    workload: str
+    spec: UpdateSpec
+    method: str
+    rounds: list[SimRoundReport]
+
+    @property
+    def build_seconds(self) -> float:
+        return self.rounds[0].end_to_end if self.rounds else 0.0
+
+    @property
+    def refresh_seconds(self) -> float:
+        return sum(r.end_to_end for r in self.rounds[1:])
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(r.end_to_end for r in self.rounds)
+
+
+def simulate_scenario(
+    workload: Workload,
+    spec: UpdateSpec,
+    cost_model: CostModel,
+    budget_bytes: float,
+    method: str = "sc",
+    n_workers: int = 1,
+    n_writers: int | None = None,
+) -> SimScenarioReport:
+    """Discrete-event multi-round refresh (paper-scale full-vs-incremental).
+
+    Each round's refresh view feeds the shared event engine; ``method="sc"``
+    re-solves the plan per round against the view's update-mode speedup
+    scores, ``method="serial"`` is the no-opt baseline."""
+    rounds: list[SimRoundReport] = []
+    for r in range(spec.n_rounds + 1):
+        view = workload if r == 0 else incremental_view(workload, spec, r)
+        g = view.to_graph(cost_model)
+        if method == "serial":
+            plan, mode = serial_plan(g), "serial"
+        elif method == "sc":
+            plan, mode = solve(g, budget=budget_bytes, n_workers=n_workers), "sc"
+        else:
+            raise ValueError(f"unknown method {method!r}")
+        sim = simulate_events(
+            view, plan, cost_model, mode=mode, n_workers=n_workers,
+            n_writers=n_writers,
+        )
+        rounds.append(
+            SimRoundReport(
+                round_idx=r, mode=spec.mode if r else "build", plan=plan, sim=sim
+            )
+        )
+    return SimScenarioReport(
+        workload=workload.name, spec=spec, method=method, rounds=rounds
+    )

@@ -23,7 +23,15 @@ from ..core.speedup import PAPER_COST_MODEL, CostModel
 from .engine import SimReport, simulate_events
 from .workloads import Workload
 
-__all__ = ["SimReport", "simulate", "speedup"]
+__all__ = ["SimReport", "simulate", "simulate_scenario", "speedup"]
+
+
+def simulate_scenario(*args, **kwargs):
+    """Multi-round full-vs-incremental refresh scenario (paper's update-type
+    axis) on the discrete-event backend — see ``mv.incremental``."""
+    from .incremental import simulate_scenario as _sim
+
+    return _sim(*args, **kwargs)
 
 
 def simulate(

@@ -4,7 +4,20 @@
 atomic rename, an fsync'd manifest of completed materializations (the
 restart/crash-recovery source of truth), and an optional bandwidth throttle so
 laptop-scale experiments can reproduce the paper's NFS read/write bandwidths
-(519.8 / 358.9 MB/s) or any slower tier.
+(519.8 / 358.9 MB/s) or any slower tier. Throttling is keyed to the *logical*
+table bytes (``table_nbytes``) in both directions, so the modeled bandwidths
+apply to the same byte count the cost model and the Memory Catalog account.
+
+Incremental refresh stores an MV as an ordered sequence of *parts* (the way
+warehouses append Parquet partitions): ``write`` replaces the whole MV with
+a single new part, ``append`` adds one part containing only the delta rows
+(charged at delta bytes), and ``read`` concatenates the manifest-recorded
+parts. Part files carry immutable monotone ids and new content is always
+written to an id the current manifest does not reference, so every mutation
+commits atomically at the manifest update: a crash beforehand leaves the
+old entry (and its intact files) authoritative, with at most an orphan part
+file that readers ignore, the next write of that id overwrites, and
+``delete`` sweeps.
 """
 from __future__ import annotations
 
@@ -42,81 +55,183 @@ class DiskStore:
         self.latency = latency
         self._manifest_path = self.root / "MANIFEST.json"
         self._manifest_lock = threading.Lock()
+        self._entries_cache: dict[str, dict] | None = None
         self.read_seconds = 0.0  # cumulative blocking read time (Table IV)
         self.write_seconds = 0.0
         self._io_lock = threading.Lock()
 
     # -- paths ----------------------------------------------------------------
-    def _path(self, name: str) -> Path:
-        return self.root / f"{name}.npz"
+    def _path(self, name: str, part_id: int = 0) -> Path:
+        if part_id == 0:
+            return self.root / f"{name}.npz"
+        return self.root / f"{name}.part{part_id}.npz"
 
     def exists(self, name: str) -> bool:
-        return name in self.manifest()
+        return name in self._entries()
 
     # -- manifest (crash-consistent completion record) -------------------------
-    def manifest(self) -> dict[str, int]:
-        if not self._manifest_path.exists():
-            return {}
-        return json.loads(self._manifest_path.read_text())
+    def _entries_locked(self) -> dict[str, dict]:
+        """Parsed manifest; caller must hold ``_manifest_lock``. The lazy
+        first load happens under the lock so a concurrent ``_record`` commit
+        can never be clobbered by a stale snapshot read outside it."""
+        if self._entries_cache is None:
+            if not self._manifest_path.exists():
+                self._entries_cache = {}
+            else:
+                raw = json.loads(self._manifest_path.read_text())
+                # tolerate the legacy {name: bytes} single-part schema
+                self._entries_cache = {
+                    k: (v if isinstance(v, dict)
+                        else {"bytes": int(v), "parts": [0]})
+                    for k, v in raw.items()
+                }
+        return self._entries_cache
 
-    def _record(self, name: str, nbytes: int) -> None:
+    def _entries(self) -> dict[str, dict]:
+        # the store object is the sole writer of its root, so the parsed
+        # manifest is cached; mutations swap in a fresh dict atomically
+        # (readers on other threads always see a complete mapping)
+        cache = self._entries_cache
+        if cache is None:
+            with self._manifest_lock:
+                cache = self._entries_locked()
+        return cache
+
+    def manifest(self) -> dict[str, int]:
+        """name -> total logical bytes of the materialized MV."""
+        return {k: int(v["bytes"]) for k, v in self._entries().items()}
+
+    def _part_ids(self, name: str) -> list[int]:
+        """Manifest-referenced part file ids, in append order."""
+        return [int(p) for p in self._entries().get(name, {}).get("parts", ())]
+
+    def parts(self, name: str) -> int:
+        """Number of durable parts for ``name`` (0 = not materialized)."""
+        return len(self._part_ids(name))
+
+    def _write_manifest(self, entries: dict[str, dict]) -> None:
+        tmp = self._manifest_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(entries))
+        os.replace(tmp, self._manifest_path)
+        self._entries_cache = entries
+
+    def _record(self, name: str, nbytes: int, part_id: int, append: bool) -> None:
+        """Commit point of every mutation: the manifest atomically switches
+        the entry to reference the already-durable part file(s)."""
         with self._manifest_lock:
-            m = self.manifest()
-            m[name] = nbytes
-            tmp = self._manifest_path.with_suffix(".tmp")
-            tmp.write_text(json.dumps(m))
-            os.replace(tmp, self._manifest_path)
+            m = dict(self._entries_locked())
+            if append and name in m:
+                m[name] = {
+                    "bytes": int(m[name]["bytes"]) + nbytes,
+                    "parts": [*m[name]["parts"], part_id],
+                }
+            else:
+                m[name] = {"bytes": nbytes, "parts": [part_id]}
+            self._write_manifest(m)
 
     # -- IO --------------------------------------------------------------------
-    def write(self, name: str, table: Table) -> float:
-        """Persist table; returns elapsed seconds. Atomic: tmp + rename, then
-        the manifest records completion (a crash mid-write leaves no entry)."""
+    def _write_part(self, name: str, part: int, table: Table) -> float:
+        """Durable atomic write of one part; throttles on logical bytes."""
         t0 = time.perf_counter()
         buf = io.BytesIO()
         np.savez(buf, **{k: np.asarray(v) for k, v in table.items()})
         data = buf.getvalue()
-        tmp = self._path(name).with_suffix(".npz.tmp")
+        target = self._path(name, part)
+        tmp = target.with_suffix(".npz.tmp")
         with open(tmp, "wb") as f:
             f.write(data)
             f.flush()
             os.fsync(f.fileno())
-        os.replace(tmp, self._path(name))
+        os.replace(tmp, target)
         if self.write_bw:
-            residual = len(data) / self.write_bw - (time.perf_counter() - t0)
-            if residual > 0:
-                time.sleep(residual)
-        dt = time.perf_counter() - t0
-        with self._io_lock:
-            self.write_seconds += dt
-        self._record(name, table_nbytes(table))
-        return dt
-
-    def read(self, name: str) -> dict[str, np.ndarray]:
-        t0 = time.perf_counter()
-        if self.latency:
-            time.sleep(self.latency)
-        with np.load(self._path(name)) as z:
-            out = {k: z[k] for k in z.files}
-        if self.read_bw:
-            residual = table_nbytes(out) / self.read_bw - (
+            residual = table_nbytes(table) / self.write_bw - (
                 time.perf_counter() - t0
             )
             if residual > 0:
                 time.sleep(residual)
         dt = time.perf_counter() - t0
         with self._io_lock:
+            self.write_seconds += dt
+        return dt
+
+    def write(self, name: str, table: Table) -> float:
+        """Persist table as a single new part, replacing any prior content;
+        returns elapsed seconds. Atomic even over a multi-part MV: the new
+        content lands on a part id the manifest does not reference, the
+        manifest commit swaps the entry, and only then are the old (now
+        unreferenced) part files removed — a crash at any point leaves the
+        manifest-referenced content intact."""
+        old_ids = self._part_ids(name)
+        new_id = max(old_ids, default=-1) + 1
+        dt = self._write_part(name, new_id, table)
+        self._record(name, table_nbytes(table), new_id, append=False)
+        for p in old_ids:
+            self._path(name, p).unlink(missing_ok=True)
+        return dt
+
+    def append(self, name: str, delta: Table) -> float:
+        """Append one delta part (insert-only refresh). Costs — real and
+        throttled — scale with the delta bytes only, the storage-side half of
+        the incremental-refresh saving. Returns elapsed seconds."""
+        old_ids = self._part_ids(name)
+        if not old_ids:
+            return self.write(name, delta)
+        new_id = max(old_ids) + 1
+        dt = self._write_part(name, new_id, delta)
+        self._record(name, table_nbytes(delta), new_id, append=True)
+        return dt
+
+    def _load_part(self, name: str, part_id: int) -> dict[str, np.ndarray]:
+        with np.load(self._path(name, part_id)) as z:
+            return {k: z[k] for k in z.files}
+
+    def _throttle_read(self, t0: float, nbytes: int) -> None:
+        if self.read_bw:
+            residual = nbytes / self.read_bw - (time.perf_counter() - t0)
+            if residual > 0:
+                time.sleep(residual)
+
+    def read(self, name: str) -> dict[str, np.ndarray]:
+        return self.read_parts(name)
+
+    def read_parts(
+        self, name: str, start: int = 0, stop: int | None = None
+    ) -> dict[str, np.ndarray]:
+        """Concatenate parts ``[start, stop)`` (default: all) in append order.
+        Reading a prefix is how incremental execution recovers the pre-round
+        content of an appended MV; reading a suffix recovers its delta."""
+        t0 = time.perf_counter()
+        if self.latency:
+            time.sleep(self.latency)
+        ids = self._part_ids(name)
+        loaded = [self._load_part(name, p) for p in ids[start:stop]]
+        if not loaded:
+            raise KeyError(f"{name}: no parts in [{start}, {stop})")
+        if len(loaded) == 1:
+            out = loaded[0]
+        else:
+            out = {
+                k: np.concatenate([np.asarray(p[k]) for p in loaded])
+                for k in loaded[0]
+            }
+        self._throttle_read(t0, table_nbytes(out))
+        dt = time.perf_counter() - t0
+        with self._io_lock:
             self.read_seconds += dt
         return out
 
     def delete(self, name: str) -> None:
-        self._path(name).unlink(missing_ok=True)
         with self._manifest_lock:
-            m = self.manifest()
+            m = dict(self._entries_locked())
             if name in m:
                 del m[name]
-                tmp = self._manifest_path.with_suffix(".tmp")
-                tmp.write_text(json.dumps(m))
-                os.replace(tmp, self._manifest_path)
+                self._write_manifest(m)
+        # sweep every part file — manifest-referenced, orphaned by a crashed
+        # rewrite, or a stale .tmp left mid-write
+        for path in (self.root.glob(f"{name}.npz*"),
+                     self.root.glob(f"{name}.part*.npz*")):
+            for p in path:
+                p.unlink(missing_ok=True)
 
     def reset_counters(self) -> None:
         self.read_seconds = 0.0

@@ -3,17 +3,41 @@
 A *table* is a dict of equal-length 1-D arrays. Operators mirror the
 select-project-join units the paper carves out of TPC-DS queries: SCAN,
 FILTER, PROJECT, JOIN (equi), AGG (group-by sum/count). Arithmetic runs
-through JAX (jitted element-wise/segment kernels); data-dependent compaction
-(filter/join output sizes) happens on host, as it would in any vectorized
-engine.
+through JAX (jitted element-wise kernels); data-dependent compaction
+(filter/join output sizes) and the exact integer accumulation the
+incremental-refresh algebra needs happen on host, as they would in any
+vectorized engine.
 
 These run the *real-execution* experiments: the Controller materializes their
 outputs through the DiskStore / MemoryCatalog, and results must be bitwise
-identical between serial and short-circuit runs.
+identical between serial, short-circuit, and incremental-refresh runs.
+
+Incremental refresh (insert-only deltas, DESIGN.md §5)
+------------------------------------------------------
+Base-table rows carry a ``rid`` column: a globally unique row id that is
+monotone in the ingestion round (all rows inserted at round ``r`` sort after
+every row from rounds ``< r``). The operators are written so that, for
+insert-only input deltas, each one admits an exact delta rule:
+
+* FILTER / PROJECT / MAP are per-row / per-column: ``op(old ++ Δ) ==
+  op(old) ++ op(Δ)`` bitwise.
+* JOIN is left-driven (output rows follow left input order; the right side
+  is a PK-style first-occurrence index). Appending ``ΔR`` whose keys are all
+  already present in ``R`` cannot change the first occurrence per key, so
+  ``join(L, R ++ ΔR) == join(L, R)`` and ``Δout == join(ΔL, R ++ ΔR)``.
+  A ``ΔR`` that introduces *new* keys can match old left rows mid-stream;
+  that case is detected at runtime and falls back to a full recompute.
+* UNION sorts its output by ``rid`` (when both inputs carry one). Because
+  delta rids are strictly larger than all old rids, the merged output is
+  ``union(oldL, oldR) ++ union(ΔL, ΔR)`` — append-only again.
+* AGG keeps *mergeable partial aggregates*: per-key ``sum_*`` columns are
+  accumulated in fixed-point int64 (quantum ``1/AGG_QUANTUM``) so addition
+  is exactly associative, and ``count`` is an exact int64. Hence
+  ``merge_agg(agg(old), agg(Δ)) == agg(old ++ Δ)`` bitwise — the algebraic
+  property incremental AGG refresh needs. Floating-point segment sums do
+  not commute with merging, which is why the sums are quantized.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -21,24 +45,56 @@ import numpy as np
 
 Table = dict[str, np.ndarray]
 
+# Columns that are bookkeeping, not data: excluded from MAP inputs and AGG
+# measures (they still group/join/sort like any other column).
+META_COLS = ("key", "rid")
 
-def make_base_table(n_rows: int, n_cols: int, seed: int, key_mod: int | None = None) -> Table:
+# Fixed-point quantum for AGG sums: values are accumulated as
+# round(v * AGG_QUANTUM) in int64, so per-key sums are exactly associative
+# (merge order cannot change the result) while keeping ~5 decimal digits.
+AGG_QUANTUM = 2.0**16
+
+# rid layout: round dominates (incremental deltas always sort after old
+# rows), then the producing scan node, then the row offset within the batch.
+_RID_NODE_SLOTS = 1 << 12
+_RID_ROW_BITS = 32
+
+
+def make_rid_base(round_idx: int, node_idx: int) -> int:
+    """Start of the rid range for rows ingested by scan ``node_idx`` at
+    ``round_idx`` — monotone in round across every table."""
+    return (round_idx * _RID_NODE_SLOTS + node_idx) << _RID_ROW_BITS
+
+
+def make_base_table(
+    n_rows: int,
+    n_cols: int,
+    seed: int,
+    key_mod: int | None = None,
+    rid_base: int | None = None,
+) -> Table:
     rng = np.random.default_rng(seed)
     t: Table = {"key": rng.integers(0, key_mod or max(n_rows // 4, 4), n_rows).astype(np.int64)}
+    if rid_base is not None:
+        t["rid"] = rid_base + np.arange(n_rows, dtype=np.int64)
     for c in range(n_cols - 1):
         t[f"c{c}"] = rng.standard_normal(n_rows).astype(np.float32)
     return t
 
 
-@partial(jax.jit, static_argnames=("threshold_col",))
-def _filter_mask(col: jnp.ndarray, threshold: float, threshold_col: str = "") -> jnp.ndarray:
+def data_cols(table: Table) -> list[str]:
+    return [k for k in table if k not in META_COLS]
+
+
+@jax.jit
+def _filter_mask(col: jnp.ndarray, threshold: float) -> jnp.ndarray:
     return col > threshold
 
 
 def op_filter(table: Table, col: str = "c0", threshold: float = 0.0) -> Table:
     if col not in table:
-        col = next((k for k in table if k != "key"), None)
-        if col is None:  # key-only table (e.g. a key-only aggregate upstream)
+        col = next(iter(data_cols(table)), None)
+        if col is None:  # meta-only table (e.g. a key-only aggregate upstream)
             return dict(table)
     mask = np.asarray(_filter_mask(jnp.asarray(table[col]), threshold))
     idx = np.nonzero(mask)[0]
@@ -48,32 +104,47 @@ def op_filter(table: Table, col: str = "c0", threshold: float = 0.0) -> Table:
 def op_project(table: Table, keep_frac: float = 0.5) -> Table:
     cols = list(table)
     keep = max(1, int(round(len(cols) * keep_frac)))
-    kept = cols[:keep]
-    if "key" in table and "key" not in kept:
-        kept = ["key"] + kept[: keep - 1]
-    return {k: table[k] for k in kept}
+    # meta columns always survive projection (key for joins/aggs, rid for the
+    # incremental-union ordering); data columns fill the remaining width
+    metas = [k for k in cols if k in META_COLS]
+    data = [k for k in cols if k not in META_COLS]
+    width = max(keep - len(metas), 0)
+    kept = set(metas) | set(data[:width])
+    return {k: table[k] for k in cols if k in kept}
 
 
-@jax.jit
-def _add_derived(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    return a * 1.0001 + jnp.tanh(b)
+def _softsign(x: np.ndarray) -> np.ndarray:
+    return x / (np.float32(1.0) + np.abs(x))
 
 
 def op_map(table: Table) -> Table:
-    """Element-wise derived column (models expression evaluation)."""
+    """Element-wise derived column (models expression evaluation).
+
+    Deliberately *not* a jitted JAX kernel: delta refresh needs elementwise
+    arithmetic whose result is bitwise independent of the batch shape, and
+    XLA's shape-specialized codegen rounds transcendental approximations
+    (tanh) differently across batch sizes. Mul/add/div/abs are correctly
+    rounded by IEEE-754 — unfused numpy evaluation is deterministic per
+    element no matter how the rows are chunked.
+    """
     out = dict(table)
-    vals = [v for k, v in table.items() if k != "key"]
+    vals = [np.asarray(table[k]) for k in data_cols(table)]
     if len(vals) >= 2:
-        out["derived"] = np.asarray(
-            _add_derived(jnp.asarray(vals[0]), jnp.asarray(vals[1]))
-        )
+        out["derived"] = vals[0] * np.float32(1.0001) + _softsign(vals[1])
     elif vals:
-        out["derived"] = np.asarray(jnp.tanh(jnp.asarray(vals[0])))
+        out["derived"] = _softsign(vals[0])
     return out
 
 
 def op_join(left: Table, right: Table) -> Table:
-    """Inner equi-join on 'key' (sort-merge, host index building + JAX gather)."""
+    """Inner equi-join on 'key' (sort-merge, host index building + gather).
+
+    Left-driven: output rows follow left input order, and the right side
+    contributes its *first occurrence* per key (PK-style join). Stability of
+    the first occurrence under right-side appends is what makes the
+    incremental delta rule exact (module docstring). The right side's own
+    meta columns are dropped — the output's rid is the left's.
+    """
     lk, rk = np.asarray(left["key"]), np.asarray(right["key"])
     # build right index: first occurrence per key (PK-style join)
     order = np.argsort(rk, kind="stable")
@@ -89,33 +160,103 @@ def op_join(left: Table, right: Table) -> Table:
     for k, v in left.items():
         out[k] = np.asarray(v)[li]
     for k, v in right.items():
-        if k == "key":
+        if k in META_COLS:
             continue
         out[f"r_{k}"] = np.asarray(v)[ri]
     return out
 
 
+def join_delta_is_appendable(right_old_keys: np.ndarray, right_delta: Table) -> bool:
+    """True iff appending ``right_delta`` cannot change existing join matches
+    (no key in the delta is new). The runtime gate for the JOIN delta rule."""
+    dk = np.asarray(right_delta["key"])
+    if dk.size == 0:
+        return True
+    return bool(np.isin(dk, np.asarray(right_old_keys)).all())
+
+
+def _fixed_point(v: np.ndarray) -> np.ndarray:
+    return np.rint(np.asarray(v, np.float64) * AGG_QUANTUM).astype(np.int64)
+
+
 def op_agg(table: Table) -> Table:
-    """Group-by key, sum numeric columns (JAX segment_sum)."""
+    """Group-by key; fixed-point-exact sums + int64 count per group.
+
+    Sums accumulate as int64 fixed-point (see ``AGG_QUANTUM``) and are stored
+    back as float64 — a deterministic function of the exact integer sum, so
+    aggregation is associative and ``merge_agg`` is bitwise-exact. ``count``
+    is int64 (an int32 accumulator overflows past 2^31 rows).
+    """
     keys = np.asarray(table["key"])
     uniq, inv = np.unique(keys, return_inverse=True)
     n = len(uniq)
     out: Table = {"key": uniq}
-    inv_j = jnp.asarray(inv)
-    for k, v in table.items():
-        if k == "key":
-            continue
-        v = np.asarray(v)
+    for k in data_cols(table):
+        v = np.asarray(table[k])
         if np.issubdtype(v.dtype, np.number):
-            out[f"sum_{k}"] = np.asarray(
-                jax.ops.segment_sum(jnp.asarray(v, jnp.float32), inv_j, num_segments=n)
-            )
-    out["count"] = np.asarray(
-        jax.ops.segment_sum(jnp.ones(len(keys), jnp.int32), inv_j, num_segments=n)
-    )
+            acc = np.zeros(n, np.int64)
+            np.add.at(acc, inv, _fixed_point(v))
+            out[f"sum_{k}"] = acc.astype(np.float64) / AGG_QUANTUM
+    out["count"] = np.bincount(inv, minlength=n).astype(np.int64)
+    return out
+
+
+def merge_agg(old: Table, delta: Table) -> Table:
+    """Merge two partial aggregates: ``merge_agg(agg(a), agg(b)) == agg(a++b)``
+    bitwise (sums re-enter fixed-point, so addition is exact; counts are
+    int64). Key order of the result is sorted-unique, matching ``op_agg``."""
+    ok, dk = np.asarray(old["key"]), np.asarray(delta["key"])
+    uniq = np.union1d(ok, dk)
+    oi = np.searchsorted(uniq, ok)
+    di = np.searchsorted(uniq, dk)
+    out: Table = {"key": uniq}
+    for col in old:
+        if col == "key":
+            continue
+        ov = np.asarray(old[col])
+        dv = np.asarray(delta[col]) if col in delta else None
+        if col == "count":
+            acc = np.zeros(len(uniq), np.int64)
+            acc[oi] = ov
+            if dv is not None:
+                acc[di] += dv
+            out[col] = acc
+        else:
+            acc = np.zeros(len(uniq), np.int64)
+            acc[oi] = _fixed_point(ov)
+            if dv is not None:
+                acc[di] += _fixed_point(dv)
+            out[col] = acc.astype(np.float64) / AGG_QUANTUM
     return out
 
 
 def op_union(left: Table, right: Table) -> Table:
+    """Union of the common columns. When both sides carry a ``rid``, rows are
+    ordered by it — the canonical order that makes incremental refresh
+    append-only (delta rids are strictly larger than all old rids)."""
     common = [k for k in left if k in right]
-    return {k: np.concatenate([np.asarray(left[k]), np.asarray(right[k])]) for k in common}
+    out = {k: np.concatenate([np.asarray(left[k]), np.asarray(right[k])]) for k in common}
+    if "rid" in out:
+        order = np.argsort(out["rid"], kind="stable")
+        out = {k: v[order] for k, v in out.items()}
+    return out
+
+
+def empty_like(schema: dict[str, np.dtype]) -> Table:
+    """A zero-row table with the given column schema (an empty delta)."""
+    return {k: np.empty(0, dtype=dt) for k, dt in schema.items()}
+
+
+def table_schema(table: Table) -> dict[str, np.dtype]:
+    return {k: np.asarray(v).dtype for k, v in table.items()}
+
+
+def concat_tables(parts: list[Table]) -> Table:
+    """Column-wise concatenation of same-schema tables (store parts)."""
+    if not parts:
+        raise ValueError("concat_tables needs at least one part")
+    if len(parts) == 1:
+        return dict(parts[0])
+    return {
+        k: np.concatenate([np.asarray(p[k]) for p in parts]) for k in parts[0]
+    }

@@ -107,6 +107,8 @@ class MVNode:
     base_read: float = 0.0  # bytes scanned from base tables (SCAN nodes);
     # base tables are never in the Memory Catalog, so this cost is identical
     # under every method — it is what partitioning (TPC-DSp) shrinks.
+    delta_fn: Callable | None = None  # SCAN ingestion: delta_fn(round, frac)
+    # -> Table of the rows ingested at that round (round 0 = initial load)
 
 
 @dataclasses.dataclass
@@ -124,15 +126,25 @@ class Workload:
             (p, i) for i, node in enumerate(self.nodes) for p in node.parents
         )
 
-    def to_graph(self, cost_model: CostModel = PAPER_COST_MODEL) -> MVGraph:
+    def to_graph(
+        self,
+        cost_model: CostModel = PAPER_COST_MODEL,
+        update: "UpdateSpec | None" = None,
+        round_idx: int = 1,
+    ) -> MVGraph:
+        """Speedup-scored MVGraph. With ``update``, nodes are scored under the
+        active update mode: sizes become the round's *update bytes* (delta for
+        delta-propagating operators), which shrinks the short-circuitable
+        traffic and changes which nodes are worth flagging."""
         from ..core.speedup import score_graph
 
+        wl = self if update is None else incremental_view(self, update, round_idx)
         return score_graph(
-            self.n,
-            self.edges(),
-            [n.size for n in self.nodes],
+            wl.n,
+            wl.edges(),
+            [n.size for n in wl.nodes],
             cost_model,
-            names=[n.name for n in self.nodes],
+            names=[n.name for n in wl.nodes],
         )
 
     def serial_time(self, cost_model: CostModel = PAPER_COST_MODEL) -> float:
@@ -150,6 +162,98 @@ class Workload:
         serial = self.serial_time(cost_model)
         compute = sum(n.compute for n in self.nodes)
         return (serial - compute) / serial if serial else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Update modes (paper §VI: "for different types of updates (full vs.
+# incremental)")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UpdateSpec:
+    """How a workload is refreshed after its initial build.
+
+    ``mode="full"`` recomputes every MV from its complete inputs each round;
+    ``mode="incremental"`` propagates insert-only deltas through the
+    delta-supporting operators (DESIGN.md §5). ``ingest_frac`` is the
+    fraction of each ingesting base table's initial rows appended per round;
+    ``ingest`` selects which scan nodes receive new data (None = every
+    root — the default models fact-and-dimension feeds all landing data;
+    pass a subset to model static dimension tables, whose untouched
+    subtrees are skipped entirely).
+    """
+
+    mode: str = "incremental"
+    ingest_frac: float = 0.1
+    n_rounds: int = 3
+    ingest: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if self.mode not in ("full", "incremental"):
+            raise ValueError(f"unknown update mode {self.mode!r}")
+        if not (0.0 < self.ingest_frac <= 1.0):
+            raise ValueError("ingest_frac must be in (0, 1]")
+
+    def resolve_ingest(self, workload: Workload) -> frozenset[int]:
+        if self.ingest is not None:
+            return frozenset(self.ingest)
+        return frozenset(
+            i for i, n in enumerate(workload.nodes) if not n.parents
+        )
+
+
+def incremental_view(
+    workload: Workload,
+    spec: UpdateSpec,
+    round_idx: int = 1,
+    sizes: Sequence[float] | None = None,
+) -> Workload:
+    """The per-round refresh view of a workload: a same-shape Workload whose
+    node sizes are the round's *update bytes* (insert-only delta for
+    delta-propagating operators, full rewrite for merged/replaced ones),
+    whose ``base_read`` carries the round's historical re-reads (a join's
+    full build side, an aggregate's previous state — never catalog-
+    resident), and whose compute is the round's incremental work. Feeding
+    this view to ``score_graph`` / the simulator / the planner is what makes
+    every layer update-mode aware. ``sizes`` overrides the per-node full
+    sizes (e.g. observed bytes from the store manifest — the paper's
+    "metrics from previous runs")."""
+    from ..core.speedup import propagate_update
+
+    base_sizes = [float(s) for s in (sizes if sizes is not None else
+                                     [n.size for n in workload.nodes])]
+    upd = propagate_update(
+        [n.op for n in workload.nodes],
+        [n.parents for n in workload.nodes],
+        base_sizes,
+        [n.compute for n in workload.nodes],
+        [n.base_read for n in workload.nodes],
+        spec.resolve_ingest(workload),
+        spec.ingest_frac,
+        round_idx=round_idx,
+        mode=spec.mode,
+    )
+    nodes = [
+        dataclasses.replace(
+            node,
+            size=upd.update_bytes[v],
+            compute=upd.compute[v],
+            base_read=upd.extra_read[v],
+        )
+        for v, node in enumerate(workload.nodes)
+    ]
+    meta = dict(workload.meta)
+    meta["update"] = dict(
+        mode=spec.mode,
+        round=round_idx,
+        ingest_frac=spec.ingest_frac,
+        statuses=upd.statuses,
+        full_sizes=upd.full_sizes,
+        lineage=upd.lineage,
+    )
+    return Workload(
+        name=f"{workload.name}@{spec.mode}-r{round_idx}", nodes=nodes, meta=meta
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -376,21 +480,44 @@ def _anchor(workloads: list[Workload], target_s: float,
 # ---------------------------------------------------------------------------
 
 def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
-                     n_cols: int = 4, seed: int = 0) -> Workload:
+                     n_cols: int = 4, seed: int = 0,
+                     key_mod: int | None = None) -> Workload:
     """Attach real compute fns + actual base tables. Root sizes are rescaled
     to ``bytes_per_root`` so tests/benches run in seconds; a calibration pass
     (the paper's 'metrics from previous runs') then measures true output
-    sizes."""
+    sizes.
+
+    Every base-table row carries a globally unique, round-monotone ``rid``
+    (tableops module docstring), and each SCAN node gets a ``delta_fn(round,
+    frac)`` generating that round's ingested rows deterministically — the
+    same rows under full and incremental refresh, so the two modes are
+    bitwise comparable. ``key_mod`` overrides the join-key range: small
+    values saturate the key space (right-side deltas carry no new keys, the
+    JOIN delta rule applies), huge values force the new-key fallback path.
+    """
     from . import tableops as T
 
     rows = max(64, bytes_per_root // (8 * n_cols))
+    kmod = key_mod or max(rows // 4, 4)
+
+    def make_delta_fn(i: int):
+        def delta_fn(round_idx: int, frac: float = 0.1):
+            n = rows if round_idx == 0 else max(int(rows * frac), 1)
+            return T.make_base_table(
+                n,
+                n_cols,
+                seed=(seed * 1000 + i) * 1009 + round_idx,
+                key_mod=kmod,
+                rid_base=T.make_rid_base(round_idx, i),
+            )
+        return delta_fn
 
     def make_fn(i: int, node: MVNode):
         op = node.op
 
         def fn(inputs):
             if op == "SCAN":
-                return T.make_base_table(rows, n_cols, seed=seed * 1000 + i)
+                return make_delta_fn(i)(0)
             if op == "JOIN" and len(inputs) >= 2:
                 out = inputs[0]
                 for other in inputs[1:]:
@@ -420,6 +547,7 @@ def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
             size=n.size,
             compute=n.compute,
             fn=make_fn(i, n),
+            delta_fn=make_delta_fn(i) if n.op == "SCAN" else None,
         )
         for i, n in enumerate(workload.nodes)
     ]

@@ -58,3 +58,84 @@ def test_diskstore_write_is_atomic(tmp_path):
     # a stray tmp file (simulated crash) must not appear in the manifest
     (tmp_path / "b.npz.tmp").write_bytes(b"partial")
     assert not store.exists("b")
+
+
+def test_catalog_clear_resets_peak_and_reset_stats():
+    cat = MemoryCatalog(100.0)
+    cat.put("a", object(), 80.0)
+    cat.release("a")
+    assert cat.peak_bytes == 80.0
+    # restart path: a reused catalog must not report the stale peak
+    cat.clear()
+    assert cat.peak_bytes == 0.0 and cat.used_bytes == 0.0
+    cat.put("b", object(), 30.0)
+    cat.put("c", object(), 20.0)
+    cat.release("c")
+    cat.reset_stats()  # keeps residents, resets peak to current usage
+    assert "b" in cat and cat.peak_bytes == 30.0
+
+
+def test_diskstore_append_parts_roundtrip(tmp_path):
+    store = DiskStore(tmp_path)
+    t0 = {"key": np.arange(6, dtype=np.int64), "x": np.ones(6, np.float32)}
+    d1 = {"key": np.arange(3, dtype=np.int64), "x": np.full(3, 2, np.float32)}
+    d2 = {"key": np.arange(2, dtype=np.int64), "x": np.full(2, 3, np.float32)}
+    store.write("mv", t0)
+    store.append("mv", d1)
+    store.append("mv", d2)
+    assert store.parts("mv") == 3
+    assert store.manifest()["mv"] == sum(map(table_nbytes, (t0, d1, d2)))
+    full = store.read("mv")
+    np.testing.assert_array_equal(
+        full["x"], np.concatenate([t0["x"], d1["x"], d2["x"]])
+    )
+    # prefix = old content, suffix = the deltas
+    np.testing.assert_array_equal(store.read_parts("mv", 0, 1)["x"], t0["x"])
+    np.testing.assert_array_equal(
+        store.read_parts("mv", 1)["x"], np.concatenate([d1["x"], d2["x"]])
+    )
+    # a full write replaces every part
+    store.write("mv", t0)
+    assert store.parts("mv") == 1
+    assert store.manifest()["mv"] == table_nbytes(t0)
+    np.testing.assert_array_equal(store.read("mv")["x"], t0["x"])
+
+
+def test_diskstore_append_throttles_on_delta_bytes(tmp_path):
+    # at 1 MB/s, charging total bytes (1 MiB + 4 KiB) would sleep >= 1.05s;
+    # charging delta bytes sleeps ~4 ms (generous margin absorbs fsync noise)
+    store = DiskStore(tmp_path, write_bw=1e6)
+    big = {"x": np.zeros(1 << 18, np.float32)}   # 1 MiB
+    small = {"x": np.zeros(1 << 10, np.float32)}  # 4 KiB
+    store.write("mv", big)
+    dt = store.append("mv", small)
+    assert dt < 0.5, "append must be charged delta bytes, not total bytes"
+
+
+def test_diskstore_rewrite_of_multipart_mv_is_crash_atomic(tmp_path):
+    """A rewrite that crashes before the manifest commit must leave the old
+    multi-part content fully intact (never new-part-0 + stale deltas)."""
+    store = DiskStore(tmp_path)
+    store.write("mv", {"x": np.arange(4)})
+    store.append("mv", {"x": np.arange(4, 6)})
+    # simulate a crashed write(): the new part lands on an id the manifest
+    # does not reference, then the process dies before _record
+    new_id = max(store._part_ids("mv")) + 1
+    store._write_part("mv", new_id, {"x": np.full(3, 100)})
+    np.testing.assert_array_equal(store.read("mv")["x"], np.arange(6))
+    assert store.parts("mv") == 2
+    # the next real write lands cleanly despite the orphan
+    store.write("mv", {"x": np.full(3, 7)})
+    np.testing.assert_array_equal(store.read("mv")["x"], np.full(3, 7))
+    assert store.parts("mv") == 1
+
+
+def test_diskstore_delete_removes_parts_and_tmp(tmp_path):
+    store = DiskStore(tmp_path)
+    t = {"x": np.arange(8)}
+    store.write("mv", t)
+    store.append("mv", t)
+    (tmp_path / "mv.npz.tmp").write_bytes(b"partial")  # crashed rewrite
+    store.delete("mv")
+    assert not store.exists("mv")
+    assert list(tmp_path.glob("mv*.npz*")) == []

@@ -1,0 +1,257 @@
+"""Incremental refresh subsystem: full-vs-incremental scenarios end to end.
+
+* incremental refresh of a realized workload is bitwise identical to a full
+  recompute after every multi-round scenario (the acceptance property),
+  across seeds, worker counts, runtime join fallbacks, and static subtrees;
+* every round of a multi-round incremental plan stays within the catalog
+  budget at every worker count;
+* the update-aware cost model: incremental views shrink short-circuitable
+  bytes, statuses propagate per the delta rules, and simulated incremental
+  rounds refresh faster than full rounds while S/C stays > 1x.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CostModel
+from repro.core.speedup import APPENDED, REPLACED, STATIC
+from repro.mv import (
+    DiskStore,
+    UpdateSpec,
+    calibrate_sizes,
+    generate_workload,
+    incremental_view,
+    paper_workloads,
+    realize_workload,
+    run_scenario,
+    simulate_scenario,
+    verify_scenario_equivalence,
+)
+
+CM = CostModel(
+    disk_read_bw=50e6,
+    disk_write_bw=50e6,
+    mem_read_bw=1e12,
+    mem_write_bw=1e12,
+    disk_latency=0.0,
+)
+
+
+def build(tmp_path, n_nodes=14, seed=3, bytes_per_root=1 << 15, key_mod=None):
+    wl = realize_workload(
+        generate_workload(n_nodes=n_nodes, seed=seed),
+        bytes_per_root=bytes_per_root,
+        key_mod=key_mod,
+    )
+    return calibrate_sizes(wl, DiskStore(tmp_path / "calib"))
+
+
+def run_both(tmp_path, wl, spec_kw, budget_frac=0.4, k=1):
+    budget = sum(n.size for n in wl.nodes) * budget_frac
+    reports, stores = {}, {}
+    for mode in ("incremental", "full"):
+        spec = UpdateSpec(mode=mode, **spec_kw)
+        store = DiskStore(tmp_path / mode)
+        stores[mode] = store
+        reports[mode] = run_scenario(
+            wl, store, budget, spec, CM, n_compute_workers=k
+        )
+    verify_scenario_equivalence(wl, stores["incremental"], stores["full"])
+    return reports, stores, budget
+
+
+# ---------------------------------------------------------------------------
+# (a) bitwise equivalence of incremental refresh vs full recompute
+# ---------------------------------------------------------------------------
+
+def test_incremental_bitwise_equals_full_recompute(tmp_path):
+    wl = build(tmp_path)
+    reports, _, budget = run_both(
+        tmp_path, wl, dict(ingest_frac=0.3, n_rounds=3)
+    )
+    inc = reports["incremental"]
+    assert len(inc.rounds) == 4
+    # refresh rounds must actually exercise the delta paths
+    appended = sum(
+        sum(1 for s in r.statuses.values() if s == APPENDED)
+        for r in inc.rounds[1:]
+    )
+    assert appended > 0
+    assert all(
+        r.run.peak_catalog_bytes <= budget + 1e-9 for r in inc.rounds
+    )
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_incremental_bitwise_property(seed):
+    import shutil
+    import tempfile
+    from pathlib import Path
+
+    tmp_path = Path(tempfile.mkdtemp(prefix=f"inc{seed}_"))
+    try:
+        wl = build(tmp_path, n_nodes=10, seed=seed, bytes_per_root=1 << 13)
+        run_both(tmp_path, wl, dict(ingest_frac=0.25, n_rounds=2))
+    finally:
+        shutil.rmtree(tmp_path, ignore_errors=True)
+
+
+def test_join_new_key_fallback_still_bitwise(tmp_path):
+    """A huge key space makes right-side deltas introduce new join keys, so
+    the JOIN delta rule cannot apply: the engine must detect it at runtime,
+    fall back to full recomputation, and stay bitwise identical."""
+    wl = build(tmp_path, seed=3, key_mod=1 << 30)
+    assert any(len(n.parents) >= 2 and n.op == "JOIN" for n in wl.nodes)
+    reports, _, _ = run_both(tmp_path, wl, dict(ingest_frac=0.3, n_rounds=2))
+    fallbacks = sum(r.join_fallbacks for r in reports["incremental"].rounds)
+    assert fallbacks > 0
+
+
+def test_static_subtrees_are_skipped(tmp_path):
+    """With a partial ingest set, subtrees fed only by static scans are
+    skipped in refresh rounds and their stored MVs stay untouched."""
+    wl = build(tmp_path, seed=7)
+    roots = [i for i, n in enumerate(wl.nodes) if not n.parents]
+    assert len(roots) >= 2
+    spec_kw = dict(ingest_frac=0.3, n_rounds=2, ingest=(roots[0],))
+    view = incremental_view(wl, UpdateSpec(mode="incremental", **spec_kw), 1)
+    statuses = view.meta["update"]["statuses"]
+    static = {wl.nodes[i].name for i, s in enumerate(statuses) if s == STATIC}
+    assert static, "seed must produce a static subtree"
+    reports, stores, _ = run_both(tmp_path, wl, spec_kw)
+    for r in reports["incremental"].rounds[1:]:
+        assert static <= set(r.run.skipped)
+    # static MVs still single-part (never rewritten or appended)
+    for name in static:
+        assert stores["incremental"].parts(name) == 1
+
+
+def test_union_over_ridless_static_agg_side_stays_bitwise(tmp_path):
+    """A UNION whose one input is AGG-derived (no rid) cannot use the append
+    rule even when that side is static — the engine must recompute it fully
+    and stay bitwise identical to the full-mode run."""
+    from repro.mv import MVNode, Workload
+
+    spec_nodes = [
+        MVNode("mv0", (), "SCAN", 1e6, 0.0),
+        MVNode("mv1", (), "SCAN", 1e6, 0.0),
+        MVNode("mv2", (1,), "AGG", 1e5, 0.0),
+        MVNode("mv3", (0, 2), "UNION", 1e6, 0.0),
+        MVNode("mv4", (3,), "FILTER", 5e5, 0.0),
+    ]
+    wl = realize_workload(Workload("union_agg", spec_nodes),
+                          bytes_per_root=1 << 14)
+    wl = calibrate_sizes(wl, DiskStore(tmp_path / "calib"))
+    reports, _, _ = run_both(
+        tmp_path, wl, dict(ingest_frac=0.3, n_rounds=2, ingest=(0,))
+    )
+    # the union must not have taken the append path
+    for r in reports["incremental"].rounds[1:]:
+        assert r.statuses["mv3"] != APPENDED
+
+
+def test_multiround_budget_respected_at_every_k(tmp_path):
+    """Acceptance: a multi-round incremental plan stays within the catalog
+    budget at every round for every worker count."""
+    for k in (1, 2, 3):
+        wl = build(tmp_path / f"k{k}", seed=5)
+        reports, _, budget = run_both(
+            tmp_path / f"k{k}", wl, dict(ingest_frac=0.25, n_rounds=3),
+            budget_frac=0.3, k=k,
+        )
+        for mode, rep in reports.items():
+            for r in rep.rounds:
+                assert r.run.peak_catalog_bytes <= budget + 1e-9, (mode, k)
+
+
+def test_scenario_catalog_hits_and_appends(tmp_path):
+    """Refresh rounds short-circuit deltas through the catalog and append
+    delta parts on storage rather than rewriting appended MVs."""
+    wl = build(tmp_path, seed=11)
+    reports, stores, _ = run_both(tmp_path, wl, dict(ingest_frac=0.3, n_rounds=2))
+    inc = reports["incremental"]
+    assert all(r.run.catalog_hits > 0 for r in inc.rounds)
+    appended_names = {
+        name
+        for r in inc.rounds[1:]
+        for name, s in r.statuses.items()
+        if s == APPENDED
+    }
+    assert any(stores["incremental"].parts(n) > 1 for n in appended_names)
+
+
+# ---------------------------------------------------------------------------
+# (b) update-aware cost model / planner
+# ---------------------------------------------------------------------------
+
+def test_incremental_view_shrinks_short_circuitable_bytes():
+    wl = generate_workload(20, seed=4)
+    spec = UpdateSpec(mode="incremental", ingest_frac=0.05, n_rounds=1)
+    view = incremental_view(wl, spec, 1)
+    assert sum(n.size for n in view.nodes) < sum(n.size for n in wl.nodes)
+    statuses = view.meta["update"]["statuses"]
+    # delta-propagating nodes carry delta-scale update bytes
+    for i, s in enumerate(statuses):
+        if s == APPENDED:
+            assert view.nodes[i].size <= 0.5 * wl.nodes[i].size
+    for i, node in enumerate(wl.nodes):
+        if statuses[i] == REPLACED and node.op != "AGG":
+            assert any(statuses[p] == REPLACED for p in node.parents)
+        if any(statuses[p] == REPLACED for p in node.parents):
+            assert statuses[i] == REPLACED
+    # full-mode views keep full sizes on every non-scan node
+    full_view = incremental_view(wl, UpdateSpec(mode="full", ingest_frac=0.05), 1)
+    for i, node in enumerate(wl.nodes):
+        if node.parents:
+            assert full_view.nodes[i].size >= wl.nodes[i].size
+
+
+def test_update_mode_changes_flagging():
+    """Incremental scoring changes which nodes are worth flagging under the
+    same budget — the planner must re-solve per update mode."""
+    from repro.core import solve
+
+    wl = generate_workload(24, seed=8)
+    budget = sum(n.size for n in wl.nodes) * 0.01
+    g_full = wl.to_graph(CM)
+    g_inc = wl.to_graph(CM, update=UpdateSpec(mode="incremental", ingest_frac=0.05))
+    pf = solve(g_full, budget=budget)
+    pi = solve(g_inc, budget=budget)
+    assert pi.flagged != pf.flagged
+    # deltas are small: the same byte budget flags more nodes incrementally
+    assert len(pi.flagged) > len(pf.flagged)
+
+
+def test_simulated_incremental_rounds_beat_full_rounds():
+    """Paper axis on the simulator: incremental rounds refresh faster than
+    full rounds, and S/C short-circuiting still yields > 1x within the same
+    memory budget in both modes."""
+    from repro.core.speedup import EFFECTIVE_NFS_COST_MODEL
+
+    wl = paper_workloads(10.0)[0]
+    budget = 10.0 * 1e9 * 0.016
+    res = {}
+    for mode in ("full", "incremental"):
+        spec = UpdateSpec(mode=mode, ingest_frac=0.05, n_rounds=2)
+        for method in ("serial", "sc"):
+            rep = simulate_scenario(
+                wl, spec, EFFECTIVE_NFS_COST_MODEL, budget, method=method
+            )
+            res[(mode, method)] = rep.refresh_seconds
+    assert res[("incremental", "sc")] < res[("full", "sc")]
+    assert res[("incremental", "serial")] < res[("full", "serial")]
+    assert res[("full", "serial")] / res[("full", "sc")] > 1.0
+    assert res[("incremental", "serial")] / res[("incremental", "sc")] > 1.0
+
+
+def test_round_zero_is_identical_across_modes(tmp_path):
+    """The build round is mode-independent: same plans, same stored bytes."""
+    wl = build(tmp_path, seed=2, n_nodes=10)
+    reports, stores, _ = run_both(tmp_path, wl, dict(ingest_frac=0.2, n_rounds=1))
+    a = reports["incremental"].rounds[0]
+    b = reports["full"].rounds[0]
+    assert a.plan.order == b.plan.order
+    assert a.plan.flagged == b.plan.flagged
+    assert set(a.run.executed) == set(b.run.executed)

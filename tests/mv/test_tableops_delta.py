@@ -1,0 +1,159 @@
+"""Delta-propagation algebra of the table operators (DESIGN.md §5).
+
+Property tests that every operator's incremental refresh rule is *bitwise*
+identical to a full recompute over the concatenated input — the invariant
+the incremental engine's correctness induction rests on:
+
+* FILTER / PROJECT / MAP:  op(old ++ Δ) == op(old) ++ op(Δ)
+* JOIN (left delta):       join(L ++ ΔL, R) == join(L, R) ++ join(ΔL, R)
+* JOIN (right delta, no new keys):  join(L, R ++ ΔR) == join(L, R)
+* UNION (rid-ordered):     union(L ++ ΔL, R ++ ΔR)
+                           == union(L, R) ++ union(ΔL, ΔR)
+* AGG (mergeable partials): agg(old ++ Δ) == merge_agg(agg(old), agg(Δ))
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.mv import tableops as T
+
+
+def tables_pair(seed, rows_old=200, rows_delta=40, n_cols=4, key_mod=16):
+    """(old, delta) with round-monotone rids, same schema/key space."""
+    old = T.make_base_table(rows_old, n_cols, seed=seed, key_mod=key_mod,
+                           rid_base=T.make_rid_base(0, 0))
+    delta = T.make_base_table(rows_delta, n_cols, seed=seed + 1,
+                              key_mod=key_mod, rid_base=T.make_rid_base(1, 0))
+    return old, delta
+
+
+def concat(a, b):
+    return {k: np.concatenate([a[k], b[k]]) for k in a}
+
+
+def assert_bitwise(a, b):
+    assert set(a) == set(b), (sorted(a), sorted(b))
+    for col in a:
+        va, vb = np.asarray(a[col]), np.asarray(b[col])
+        assert va.dtype == vb.dtype, col
+        assert va.shape == vb.shape, col
+        assert va.tobytes() == vb.tobytes(), f"column {col} differs"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rowwise_ops_append_commute(seed):
+    old, delta = tables_pair(seed)
+    for op in (
+        lambda t: T.op_filter(t, threshold=-0.2),
+        T.op_map,
+        lambda t: T.op_project(t, keep_frac=0.6),
+    ):
+        assert_bitwise(op(concat(old, delta)), concat(op(old), op(delta)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_join_left_delta_appends(seed):
+    left, dleft = tables_pair(seed)
+    right, _ = tables_pair(seed + 7)
+    full = T.op_join(concat(left, dleft), right)
+    inc = concat(T.op_join(left, right), T.op_join(dleft, right))
+    assert_bitwise(full, inc)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_join_right_delta_without_new_keys_is_invisible(seed):
+    left, _ = tables_pair(seed)
+    right, dright = tables_pair(seed + 3, key_mod=8)  # saturated key space
+    if not T.join_delta_is_appendable(right["key"], dright):
+        return  # key space not saturated for this draw
+    assert_bitwise(T.op_join(left, concat(right, dright)),
+                   T.op_join(left, right))
+
+
+def test_join_appendable_gate_detects_new_keys():
+    right = {"key": np.array([1, 2, 3], np.int64)}
+    assert T.join_delta_is_appendable(right["key"], {"key": np.array([2, 3], np.int64)})
+    assert not T.join_delta_is_appendable(right["key"], {"key": np.array([2, 9], np.int64)})
+    assert T.join_delta_is_appendable(right["key"], {"key": np.array([], np.int64)})
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_union_rid_order_appends(seed):
+    # distinct scan slots so old/delta rids interleave across the two inputs
+    l0 = T.make_base_table(100, 4, seed=seed, rid_base=T.make_rid_base(0, 0))
+    r0 = T.make_base_table(80, 4, seed=seed + 1, rid_base=T.make_rid_base(0, 1))
+    dl = T.make_base_table(30, 4, seed=seed + 2, rid_base=T.make_rid_base(1, 0))
+    dr = T.make_base_table(20, 4, seed=seed + 3, rid_base=T.make_rid_base(1, 1))
+    full = T.op_union(concat(l0, dl), concat(r0, dr))
+    inc = concat(T.op_union(l0, r0), T.op_union(dl, dr))
+    assert_bitwise(full, inc)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 199))
+def test_agg_partials_merge_exactly(seed, split):
+    t = T.make_base_table(200, 4, seed=seed, key_mod=12,
+                          rid_base=T.make_rid_base(0, 0))
+    a = {k: v[:split] for k, v in t.items()}
+    b = {k: v[split:] for k, v in t.items()}
+    assert_bitwise(T.op_agg(t), T.merge_agg(T.op_agg(a), T.op_agg(b)))
+
+
+def test_agg_merge_is_exact_through_derived_columns():
+    """The MAP-derived column goes through fixed-point aggregation too."""
+    old, delta = tables_pair(123)
+    old, delta = T.op_map(old), T.op_map(delta)
+    assert_bitwise(T.op_agg(concat(old, delta)),
+                   T.merge_agg(T.op_agg(old), T.op_agg(delta)))
+
+
+def test_agg_count_is_int64():
+    t = T.make_base_table(64, 3, seed=0)
+    out = T.op_agg(t)
+    assert out["count"].dtype == np.int64
+    assert out["count"].sum() == 64
+
+
+def test_agg_drops_meta_columns():
+    t = T.make_base_table(64, 3, seed=0, rid_base=0)
+    out = T.op_agg(t)
+    assert "sum_rid" not in out and "rid" not in out
+    assert "sum_key" not in out
+
+
+def test_empty_delta_flows_through_every_op():
+    old, _ = tables_pair(5)
+    empty = T.empty_like(T.table_schema(old))
+    assert len(T.op_filter(empty)["key"]) == 0
+    assert len(T.op_map(empty)["derived"]) == 0
+    assert len(T.op_join(empty, old)["key"]) == 0
+    assert len(T.op_union(empty, empty)["key"]) == 0
+    agg = T.op_agg(empty)
+    assert len(agg["key"]) == 0
+    # merging an empty partial is an exact no-op
+    assert_bitwise(T.merge_agg(T.op_agg(old), agg), T.op_agg(old))
+
+
+def test_project_preserves_meta_columns_even_at_minimum_width():
+    """Repeated narrow projections must never drop key or rid — the union
+    delta rule depends on rid surviving every upstream operator."""
+    t = T.make_base_table(32, 4, seed=1, rid_base=T.make_rid_base(0, 0))
+    for _ in range(4):
+        t = T.op_project(t, keep_frac=0.5)
+        assert "key" in t and "rid" in t
+
+
+def test_map_is_batch_shape_invariant():
+    """Elementwise arithmetic must round identically no matter how rows are
+    chunked (the reason op_map avoids shape-specialized XLA kernels)."""
+    t = T.make_base_table(1001, 4, seed=9)
+    full = T.op_map(t)["derived"]
+    parts = [
+        T.op_map({k: v[i : i + 17] for k, v in t.items()})["derived"]
+        for i in range(0, 1001, 17)
+    ]
+    assert np.concatenate(parts).tobytes() == full.tobytes()
