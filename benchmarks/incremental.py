@@ -2,19 +2,24 @@
 
 The paper runs every workload "for different types of updates (full vs.
 incremental)". This benchmark reproduces that comparison on both engine
-backends:
+backends, across the three update kinds the Z-set delta model supports:
 
 1. *Simulated, paper scale*: the five Table-III workloads at 100 GB refresh
-   for several rounds under full and incremental updates (5% ingest per
-   round), with S/C plans re-solved per round against the update-mode
-   speedup scores and the 1.6% Memory Catalog. Reported per workload:
-   refresh-round time for serial vs S/C in each mode, the S/C speedup
-   within each mode, and the incremental-vs-full refresh ratio.
+   for several rounds under full and incremental updates for INSERT
+   (5% ingest per round), UPDATE (5% of live rows rewritten in place as
+   retract+reinsert pairs), and DELETE (5% of live rows tombstoned)
+   workloads, with S/C plans re-solved per round against the update-mode
+   speedup scores, per-round sizes fed forward from the previous round's
+   modeled full sizes (the simulated manifest), and the 1.6% Memory
+   Catalog. Reported per workload and kind: refresh-round time for serial
+   vs S/C in each mode, the S/C speedup within each mode, and the
+   incremental-vs-full refresh ratio.
 
-2. *Real execution, laptop scale*: a realized workload runs both scenarios
-   through the threaded engine on a throttled DiskStore and the stored MVs
-   are verified **bitwise identical** between incremental refresh and full
-   recompute — the correctness claim that makes (1) meaningful.
+2. *Real execution, laptop scale*: a realized workload runs an insert-only
+   and a mixed insert/update/delete scenario through the threaded engine on
+   a throttled DiskStore, and the stored MVs are verified **bitwise
+   identical** between incremental refresh and full recompute — the
+   correctness claim that makes (1) meaningful.
 """
 from __future__ import annotations
 
@@ -38,41 +43,64 @@ REAL_STORE_KW = dict(read_bw=60e6, write_bw=40e6, latency=2e-4)
 REAL_CM = CostModel(disk_read_bw=60e6, disk_write_bw=40e6, mem_read_bw=1e12,
                     mem_write_bw=1e12, disk_latency=2e-4)
 
+# the update-kind axis: per-round churn applied by every ingesting scan
+KINDS = {
+    "insert": dict(ingest_frac=0.05),
+    "update": dict(ingest_frac=0.0, update_frac=0.05),
+    "delete": dict(ingest_frac=0.0, delete_frac=0.05),
+}
 
-def _simulated(scale_gb: float, n_rounds: int, frac: float):
+
+def _simulated(scale_gb: float, n_rounds: int):
     budget = catalog_bytes(scale_gb)
     cm = EFFECTIVE_NFS_COST_MODEL
     out = {}
-    rows = []
-    for wl in paper_workloads(scale_gb):
-        r = {}
-        for mode in ("full", "incremental"):
-            spec = UpdateSpec(mode=mode, ingest_frac=frac, n_rounds=n_rounds)
-            for method in ("serial", "sc"):
-                rep = simulate_scenario(wl, spec, cm, budget, method=method)
-                r[f"{mode}_{method}_s"] = rep.refresh_seconds
-        r["full_speedup"] = r["full_serial_s"] / r["full_sc_s"]
-        r["inc_speedup"] = r["incremental_serial_s"] / r["incremental_sc_s"]
-        r["inc_vs_full"] = r["full_sc_s"] / r["incremental_sc_s"]
-        out[wl.name] = r
-        rows.append([
-            wl.name,
-            f"{r['full_serial_s']:.0f}", f"{r['full_sc_s']:.0f}",
-            f"{r['full_speedup']:.2f}x",
-            f"{r['incremental_serial_s']:.0f}", f"{r['incremental_sc_s']:.0f}",
-            f"{r['inc_speedup']:.2f}x", f"{r['inc_vs_full']:.2f}x",
-        ])
-    print(f"\n== Simulated refresh rounds @ {scale_gb:g}GB "
-          f"({n_rounds} rounds, {frac:.0%} ingest, 1.6% catalog) ==")
-    print(fmt_table(
-        ["workload", "full ser(s)", "full S/C(s)", "full spd",
-         "inc ser(s)", "inc S/C(s)", "inc spd", "inc/full"],
-        rows,
-    ))
-    slow = [n for n, r in out.items() if r["inc_vs_full"] <= 1.0]
-    assert not slow, f"incremental rounds not faster than full for {slow}"
-    weak = [n for n, r in out.items() if r["inc_speedup"] <= 1.0]
-    assert not weak, f"S/C speedup under incremental updates <= 1x for {weak}"
+    for kind, fracs in KINDS.items():
+        rows = []
+        kres = {}
+        for wl in paper_workloads(scale_gb):
+            r = {}
+            for mode in ("full", "incremental"):
+                spec = UpdateSpec(mode=mode, n_rounds=n_rounds, **fracs)
+                for method in ("serial", "sc"):
+                    rep = simulate_scenario(wl, spec, cm, budget, method=method)
+                    r[f"{mode}_{method}_s"] = rep.refresh_seconds
+            r["full_speedup"] = r["full_serial_s"] / r["full_sc_s"]
+            r["inc_speedup"] = r["incremental_serial_s"] / r["incremental_sc_s"]
+            r["inc_vs_full"] = r["full_sc_s"] / r["incremental_sc_s"]
+            kres[wl.name] = r
+            rows.append([
+                wl.name,
+                f"{r['full_serial_s']:.0f}", f"{r['full_sc_s']:.0f}",
+                f"{r['full_speedup']:.2f}x",
+                f"{r['incremental_serial_s']:.0f}", f"{r['incremental_sc_s']:.0f}",
+                f"{r['inc_speedup']:.2f}x", f"{r['inc_vs_full']:.2f}x",
+            ])
+        out[kind] = kres
+        print(f"\n== Simulated {kind.upper()} refresh rounds @ {scale_gb:g}GB "
+              f"({n_rounds} rounds, "
+              + ", ".join(f"{k.split('_')[0]} {v:.0%}" for k, v in fracs.items()
+                          if v) + ", 1.6% catalog) ==")
+        print(fmt_table(
+            ["workload", "full ser(s)", "full S/C(s)", "full spd",
+             "inc ser(s)", "inc S/C(s)", "inc spd", "inc/full"],
+            rows,
+        ))
+        # acceptance: the paper's axis must show S/C > 1x under every update
+        # kind; for inserts the claim holds on every workload, for
+        # update/delete churn on at least one (AGG-heavy workloads rewrite
+        # most bytes anyway)
+        weak = [n for n, r in kres.items() if r["inc_speedup"] <= 1.0]
+        if kind == "insert":
+            assert not weak, f"S/C speedup under {kind} updates <= 1x for {weak}"
+            slow = [n for n, r in kres.items() if r["inc_vs_full"] <= 1.0]
+            assert not slow, f"incremental not faster than full for {slow}"
+        else:
+            assert len(weak) < len(kres), (
+                f"no workload shows S/C > 1x under {kind} updates"
+            )
+        best = max(kres.values(), key=lambda r: r["inc_speedup"])
+        print(f"best {kind} S/C speedup: {best['inc_speedup']:.2f}x")
     return out
 
 
@@ -88,31 +116,42 @@ def _real(quick: bool, tmp_root: str):
                           bytes_per_root=bytes_per_root)
     wl = calibrate_sizes(wl, DiskStore(root / "calib"))
     budget = sum(n.size for n in wl.nodes) * 0.5
+    scenarios = {
+        "insert": dict(ingest_frac=0.2, n_rounds=2),
+        "mixed": dict(ingest_frac=0.1, update_frac=0.1, delete_frac=0.05,
+                      n_rounds=2),
+    }
     out = {}
-    stores = {}
-    for mode in ("full", "incremental"):
-        spec = UpdateSpec(mode=mode, ingest_frac=0.2, n_rounds=2)
-        store = DiskStore(root / mode, **REAL_STORE_KW)
-        stores[mode] = store
-        rep = run_scenario(wl, store, budget, spec, REAL_CM)
-        out[mode] = {
-            "build_s": rep.build_seconds,
-            "refresh_s": rep.refresh_seconds,
-            "peak_catalog_bytes": rep.peak_catalog_bytes,
-            "join_fallbacks": sum(r.join_fallbacks for r in rep.rounds),
-            "skipped": sum(len(r.run.skipped) for r in rep.rounds[1:]),
-        }
-    verify_scenario_equivalence(wl, stores["incremental"], stores["full"])
-    out["bitwise_identical"] = True
-    ratio = out["full"]["refresh_s"] / out["incremental"]["refresh_s"]
-    print("\n== Real execution (throttled store, wall-clock) ==")
-    print(fmt_table(
-        ["mode", "build(s)", "refresh(s)", "fallbacks"],
-        [[m, f"{out[m]['build_s']:.2f}", f"{out[m]['refresh_s']:.2f}",
-          out[m]["join_fallbacks"]] for m in ("full", "incremental")],
-    ))
-    print(f"incremental vs full refresh: {ratio:.2f}x  —  "
-          "stored MVs bitwise identical: OK")
+    for sname, kw in scenarios.items():
+        res = {}
+        stores = {}
+        for mode in ("full", "incremental"):
+            spec = UpdateSpec(mode=mode, **kw)
+            store = DiskStore(root / f"{sname}_{mode}", **REAL_STORE_KW)
+            stores[mode] = store
+            rep = run_scenario(wl, store, budget, spec, REAL_CM)
+            res[mode] = {
+                "build_s": rep.build_seconds,
+                "refresh_s": rep.refresh_seconds,
+                "peak_catalog_bytes": rep.peak_catalog_bytes,
+                "join_fallbacks": sum(r.join_fallbacks for r in rep.rounds),
+                "skipped": sum(len(r.run.skipped) for r in rep.rounds[1:]),
+            }
+        verify_scenario_equivalence(wl, stores["incremental"], stores["full"])
+        res["bitwise_identical"] = True
+        res["inc_vs_full"] = (
+            res["full"]["refresh_s"] / res["incremental"]["refresh_s"]
+        )
+        out[sname] = res
+        print(f"\n== Real execution: {sname} scenario "
+              "(throttled store, wall-clock) ==")
+        print(fmt_table(
+            ["mode", "build(s)", "refresh(s)", "fallbacks"],
+            [[m, f"{res[m]['build_s']:.2f}", f"{res[m]['refresh_s']:.2f}",
+              res[m]["join_fallbacks"]] for m in ("full", "incremental")],
+        ))
+        print(f"incremental vs full refresh: {res['inc_vs_full']:.2f}x  —  "
+              "stored MVs bitwise identical: OK")
     shutil.rmtree(root, ignore_errors=True)
     return out
 
@@ -121,7 +160,7 @@ def run(quick: bool = False, tmp_root: str = "results/incremental_real"):
     scale_gb = 10.0 if quick else 100.0
     n_rounds = 2 if quick else 3
     out = {
-        "simulated": _simulated(scale_gb, n_rounds, frac=0.05),
+        "simulated": _simulated(scale_gb, n_rounds),
         "real": _real(quick, tmp_root),
     }
     save_json("incremental", out)

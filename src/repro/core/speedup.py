@@ -114,7 +114,12 @@ def rescore(graph: MVGraph, cost_model: CostModel) -> MVGraph:
 
 STATIC = "static"        # no change this round; node is skipped entirely
 APPENDED = "appended"    # new output = old output ++ delta (insert-only)
+DELTA = "delta"          # new output = apply_delta(old, Δ±): a Z-set delta
+#                          carrying retractions (updates/deletes), spliced
+#                          by rid rather than appended
 REPLACED = "replaced"    # full rewrite; children must re-read everything
+
+CHANGED = (APPENDED, DELTA)  # statuses whose delta propagates to children
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,22 +151,34 @@ def propagate_update(
     frac: float,
     round_idx: int = 1,
     mode: str = "incremental",
+    update_frac: float = 0.0,
+    delete_frac: float = 0.0,
 ) -> UpdateRound:
-    """Propagate an insert-only update round through the DAG (DESIGN.md §5).
+    """Propagate a Z-set update round through the DAG (DESIGN.md §5-6).
 
     Linear growth model: each ingesting scan appends ``frac`` of its initial
-    rows per round, and a node's delta share is its *ingest lineage*
-    ``phi(v)`` — the input-byte-weighted fraction of its content tracing to
-    ingesting scans. Status propagation mirrors the real delta operators:
-    FILTER/PROJECT/MAP/UNION pass deltas through, JOIN joins the left delta
-    against its full (re-read) right sides, AGG merges partial aggregates
-    (its own output is rewritten, so children re-read it fully), and any
-    child of a replaced node recomputes fully. ``mode="full"`` forces every
-    non-scan node to REPLACED — the full-refresh baseline round.
+    rows per round, rewrites ``update_frac`` of its live rows (a retraction
+    plus an insertion — two delta rows), and retracts ``delete_frac`` (one
+    tombstone row); retraction bytes count toward update I/O and incremental
+    compute. A node's delta share is its *ingest lineage* ``phi(v)`` — the
+    input-byte-weighted fraction of its content tracing to ingesting scans.
+    Status propagation mirrors the real delta operators:
+    FILTER/PROJECT/MAP/UNION pass weighted deltas through (APPENDED when
+    insert-only, DELTA once retractions are in play), JOIN joins the left
+    delta against its full (re-read) right sides plus partial-fallback
+    corrections for right-side retractions, AGG merges signed partial
+    aggregates (its own output is rewritten, so children re-read it fully),
+    and any child of a replaced node recomputes fully. ``mode="full"``
+    forces every non-scan node to REPLACED — the full-refresh baseline
+    round.
     """
     n = len(ops)
     if round_idx < 1:
         raise ValueError("update rounds start at 1 (round 0 is the build)")
+    churn = frac + 2.0 * update_frac + delete_frac   # delta rows incl. retractions
+    growth = frac - delete_frac                      # net size drift per round
+    touch = frac + update_frac + delete_frac         # base rows visited
+    retracting = (update_frac > 0.0) or (delete_frac > 0.0)
     topo: Sequence[int] = range(n)
     if any(p >= v for v in range(n) for p in parents[v]):
         from .graph import from_parent_lists
@@ -181,7 +198,9 @@ def propagate_update(
             )
 
     def full_at(v: int, r: int) -> float:
-        return sizes[v] * (1.0 + r * frac * phi[v])
+        # deletes shrink content (growth < 0); clamp well above zero so byte
+        # ratios stay meaningful even for delete-heavy long scenarios
+        return sizes[v] * max(1.0 + r * growth * phi[v], 0.05)
 
     # rid lineage: AGG outputs drop the row id, and a UNION over any rid-less
     # input loses the canonical order its append rule needs (the engine
@@ -202,19 +221,20 @@ def propagate_update(
     comp = [0.0] * n
     for v in topo:
         ps = parents[v]
-        delta_v = sizes[v] * frac * phi[v]
-        if not ps:  # SCAN: ingestion is an append in every mode
+        delta_v = sizes[v] * churn * phi[v]
+        if not ps:  # SCAN: ingestion lands a delta part in every mode
             if phi[v] == 0.0:
                 continue
-            statuses[v] = APPENDED
+            statuses[v] = DELTA if retracting else APPENDED
             update[v] = delta_v
-            extra[v] = base_reads[v] * frac  # scans only the new base rows
-            comp[v] = computes[v] * frac
+            extra[v] = base_reads[v] * touch  # scans only the touched base rows
+            comp[v] = computes[v] * churn
             continue
         if phi[v] == 0.0:  # untouched subtree: nothing to refresh
             continue
         in0 = sum(sizes[p] for p in ps) or 1.0
-        delta_in = sum(update[p] for p in ps if statuses[p] == APPENDED)
+        delta_in = sum(update[p] for p in ps if statuses[p] in CHANGED)
+        any_retract = any(statuses[p] == DELTA for p in ps)
         forced_full = (
             mode == "full"
             or any(statuses[p] == REPLACED for p in ps)
@@ -226,15 +246,20 @@ def propagate_update(
             update[v] = full_at(v, round_idx)
             # non-replaced parents deliver only their update on the edge;
             # the rest of their (full) content is a historical re-read
+            # (clamped: heavy churn can make a parent's delta exceed its
+            # full size, and modeled bytes must never go negative)
             extra[v] = sum(
-                full_at(p, round_idx) - update[p]
+                max(full_at(p, round_idx) - update[p], 0.0)
                 for p in ps
                 if statuses[p] != REPLACED
             )
-            comp[v] = computes[v] * (1.0 + round_idx * frac * phi[v])
+            comp[v] = computes[v] * max(
+                1.0 + round_idx * growth * phi[v], 0.05
+            )
         elif ops[v] == "AGG":
-            # mergeable partial aggregates: read input deltas + own previous
-            # output, write the merged (full) output; children re-read fully
+            # mergeable (signed) partial aggregates: read input deltas + own
+            # previous output, write the merged (full) output; children
+            # re-read fully
             statuses[v] = REPLACED
             update[v] = full_at(v, round_idx)
             extra[v] = full_at(v, round_idx - 1)  # previous aggregate state
@@ -243,20 +268,33 @@ def propagate_update(
             )
         elif ops[v] == "JOIN":
             # delta rule: join the left delta against full right sides
-            # (re-read to rebuild the probe index; assumed append-safe — the
-            # real executor falls back to a full recompute when a right-side
-            # delta introduces new keys)
-            statuses[v] = APPENDED
+            # (re-read to rebuild the probe index). Right-side retractions
+            # change first-occurrence matches: the partial fallback re-joins
+            # only the affected old-left rows, so charge correction bytes
+            # proportional to each changed right side's delta share. A right
+            # delta that introduces new keys at runtime triggers the same
+            # partial fallback — the one data-dependent case this analytic
+            # model cannot see.
             left, rights = ps[0], ps[1:]
-            dleft = update[left] if statuses[left] == APPENDED else 0.0
-            update[v] = sizes[v] * (dleft / max(sizes[left], 1.0))
+            dleft = update[left] if statuses[left] in CHANGED else 0.0
+            corr = sum(
+                update[p] / max(full_at(p, round_idx), 1.0)
+                for p in rights
+                if statuses[p] == DELTA
+            )
+            statuses[v] = DELTA if (
+                statuses[left] == DELTA or corr > 0.0
+            ) else APPENDED
+            update[v] = sizes[v] * (
+                dleft / max(sizes[left], 1.0) + min(corr, 1.0)
+            )
             r_full = sum(full_at(p, round_idx) for p in rights)
             extra[v] = sum(
-                full_at(p, round_idx) - update[p] for p in rights
+                max(full_at(p, round_idx) - update[p], 0.0) for p in rights
             )
             comp[v] = computes[v] * ((dleft + r_full) / in0)
         else:  # FILTER / PROJECT / MAP / UNION: pure delta pass-through
-            statuses[v] = APPENDED
+            statuses[v] = DELTA if any_retract else APPENDED
             update[v] = sizes[v] * (delta_in / in0)
             comp[v] = computes[v] * (delta_in / in0)
     return UpdateRound(

@@ -1,29 +1,37 @@
 """Incremental MV refresh: multi-round full-vs-incremental scenarios
-(DESIGN.md §5).
+(DESIGN.md §5-6).
 
 The paper's experiment matrix runs every workload under both *full* and
 *incremental* updates. This module executes that axis end to end on both
 engine backends:
 
 * ``run_scenario``      — real execution. Round 0 is the initial build; each
-  later round ingests an insert-only delta at every ingesting scan and
-  refreshes the DAG under the round's re-solved plan. Under
-  ``mode="incremental"`` the delta-propagating operators (tableops module
-  docstring) refresh from their input deltas — short-circuited deltas are
-  held in the Memory Catalog, appends cost delta bytes on storage — while
-  merge/fallback operators rewrite. Under ``mode="full"`` every non-scan
-  node recomputes from its complete inputs. Both modes produce bitwise
-  identical stored MVs (``verify_scenario_equivalence``).
+  later round lands a Z-set delta (inserts, updates as retract+reinsert
+  pairs, deletes as tombstones) at every ingesting scan and refreshes the
+  DAG under the round's re-solved plan. Under ``mode="incremental"`` the
+  delta-propagating operators (tableops module docstring) refresh from
+  their weighted input deltas — short-circuited deltas are held in the
+  Memory Catalog, delta parts cost delta bytes (tombstones included) on
+  storage — while merge/fallback operators rewrite. Under ``mode="full"``
+  every non-scan node recomputes from its complete inputs. Both modes
+  produce bitwise identical stored MVs (``verify_scenario_equivalence``).
 * ``simulate_scenario`` — paper-scale discrete-event counterpart: each
   round's refresh view (``incremental_view``) runs through
-  ``engine.simulate_events`` with a freshly solved plan.
+  ``engine.simulate_events`` with a freshly solved plan, and the per-round
+  sizes the planner sees are fed forward from the previous round's modeled
+  full sizes — the simulator's analogue of ``run_scenario`` re-sizing each
+  round from the store manifest.
 
 Per-round refresh statuses (``core.speedup``): STATIC nodes (untouched
 subtrees) are skipped entirely; APPENDED nodes emit an insert-only delta
-(``new = old ++ delta``); REPLACED nodes rewrite their output and force
-their children to full recomputation. A JOIN predicted APPENDED falls back
-to REPLACED at runtime when a right-side delta introduces new join keys —
-the one data-dependent case the analytic model cannot see.
+(``new = old ++ delta``); DELTA nodes emit a retraction-carrying Z-set
+delta spliced by rid (``new = apply_delta(old, Δ±)``); REPLACED nodes
+rewrite their output and force their children to full recomputation. A
+JOIN whose right-side delta changes the PK first-occurrence mapping — new
+keys, deleted keys, updated match payloads — takes the runtime *partial
+fallback*: only the affected surviving old-left rows are re-joined and
+spliced back by rid (``join_fallbacks`` counts those rounds), instead of
+the whole-node recompute of the insert-only model.
 """
 from __future__ import annotations
 
@@ -35,7 +43,7 @@ from typing import Any, Sequence
 import numpy as np
 
 from ..core.altopt import Plan, serial_plan, solve
-from ..core.speedup import APPENDED, REPLACED, STATIC, CostModel
+from ..core.speedup import APPENDED, CHANGED, DELTA, REPLACED, STATIC, CostModel
 from . import tableops as T
 from .engine import RunReport, SimReport, ThreadedEngine, _RunState, simulate_events
 from .storage import DiskStore, table_nbytes
@@ -89,10 +97,11 @@ class IncrementalEngine(ThreadedEngine):
         tn0 = time.perf_counter()
         r = self.round_idx
         if not node.parents:
-            # ingestion is an append in *every* mode (round 0 = initial load)
+            # ingestion lands the round's Z-set delta in *every* mode
+            # (round 0 = the initial, weightless load)
             if node.delta_fn is None:
                 raise ValueError(f"scan {node.name} has no delta_fn")
-            self._publish_append(v, node.delta_fn(r, self.spec.ingest_frac), rt)
+            self._publish_delta(v, node.delta_fn(r, self.spec), rt)
             return time.perf_counter() - tn0
         pstat = [self.statuses[p] for p in node.parents]
         if r == 0 or self.spec.mode == "full" or REPLACED in pstat:
@@ -103,7 +112,7 @@ class IncrementalEngine(ThreadedEngine):
 
     # -- input access ---------------------------------------------------------
     def _delta_input(self, p: int, rt: _RunState) -> T.Table:
-        """This round's insert-only delta of parent ``p`` (APPENDED/STATIC)."""
+        """This round's Z-set delta of parent ``p`` (APPENDED/DELTA/STATIC)."""
         pname = self.workload.nodes[p].name
         if self.statuses[p] == STATIC:
             return T.empty_like(self.schemas[pname])
@@ -119,18 +128,28 @@ class IncrementalEngine(ThreadedEngine):
             self.workload.nodes[p].name, 0, self._parts0[self.workload.nodes[p].name]
         )
 
+    def _old_content(self, p: int) -> T.Table:
+        """Previous-round content of ``p`` whatever its status (STATIC means
+        the current store content *is* the old content)."""
+        if self.statuses[p] == STATIC:
+            return self.store.read(self.workload.nodes[p].name)
+        return self._old_input(p)
+
     def _gather_input(self, p: int, rt: _RunState) -> Any:
         """Full current content of parent ``p``, whatever its status."""
         pname = self.workload.nodes[p].name
         status = self.statuses[p]
-        if status == APPENDED and p in rt.flagged and pname in rt.catalog:
+        if status in CHANGED and p in rt.flagged and pname in rt.catalog:
             # catalog holds only the delta; historical parts come from disk
             rt.stats.hit()
             delta = rt.catalog.get(pname)
             if self._parts0[pname] == 0:
-                return delta  # first round: the delta is the whole table
+                # first round for this MV: the delta is the whole table
+                if T.WEIGHT_COL not in delta:
+                    return delta
+                return T.materialize_delta(delta)
             rt.stats.miss()
-            return T.concat_tables([self._old_input(p), delta])
+            return T.apply_delta(self._old_input(p), delta)
         return super()._gather_input(p, rt)
 
     # -- output publication ----------------------------------------------------
@@ -141,13 +160,18 @@ class IncrementalEngine(ThreadedEngine):
     def _rows(self, out: T.Table) -> int:
         return len(next(iter(out.values()))) if out else 0
 
-    def _publish_append(self, v: int, delta: T.Table, rt: _RunState) -> None:
+    def _publish_delta(self, v: int, delta: T.Table, rt: _RunState) -> None:
+        """Publish a node's round output delta: one appended part on storage
+        (tombstones included — retraction bytes are real update I/O), the
+        whole delta in the catalog when flagged. Status records what the
+        delta was: APPENDED when insert-only, DELTA when it retracts."""
         node = self.workload.nodes[v]
-        self._remember_schema(node.name, delta)
+        self._remember_schema(node.name, T.strip_weight(delta))
         if self._rows(delta) == 0:
             self.statuses[v] = STATIC  # empty delta: output is unchanged
             return
-        self.statuses[v] = APPENDED
+        retracts = bool((T.weights_of(delta) < 0).any())
+        self.statuses[v] = DELTA if retracts else APPENDED
         size = table_nbytes(delta)
         if v in rt.flagged and rt.catalog.try_put(node.name, delta, size):
             fut = rt.writer.submit(self.store.append, node.name, delta)
@@ -175,6 +199,7 @@ class IncrementalEngine(ThreadedEngine):
         if all(self._rows(d) == 0 for d in deltas):
             self.statuses[v] = STATIC  # nothing arrived on any input
             return
+        retracting = any((T.weights_of(d) < 0).any() for d in deltas)
         if node.op == "JOIN" and len(node.parents) >= 2:
             self._refresh_join(v, deltas, rt)
         elif node.op == "UNION" and len(node.parents) >= 2 and any(
@@ -182,19 +207,26 @@ class IncrementalEngine(ThreadedEngine):
             for p in node.parents
         ):
             # a rid-less input (an AGG-derived side) leaves the union output
-            # without the canonical rid order, so appended deltas would land
-            # at the wrong row positions — recompute fully instead
+            # without the canonical rid order, so delta rows would land at
+            # the wrong row positions — recompute fully instead
             self._refresh_full(v, rt)
         elif node.op == "AGG":
-            # mergeable partial aggregates: agg the delta, merge exactly into
-            # the previous output (fixed-point sums — tableops docstring)
+            # mergeable (signed) partial aggregates: agg the weighted delta,
+            # merge exactly into the previous output (fixed-point sums —
+            # tableops docstring); groups retracted to zero rows drop out
             delta_agg = node.fn([deltas[0]])
             old = self.store.read(node.name)
             self._publish_replace(v, T.merge_agg(old, delta_agg), rt)
+        elif retracting and "rid" not in self.schemas[node.name]:
+            # retractions splice by rid; a rid-less output (downstream of an
+            # AGG) has no row identity to splice against
+            self._refresh_full(v, rt)
         else:
-            # FILTER / PROJECT / MAP / UNION: pure delta pass-through; the
-            # node's own compute fn applied to the delta IS the delta rule
-            self._publish_append(v, node.fn(deltas), rt)
+            # FILTER / PROJECT / MAP / UNION: pure weighted pass-through;
+            # the node's own compute fn applied to the delta IS the delta
+            # rule (weights ride along as a meta column)
+            deltas = [T.with_weight(d) for d in deltas] if retracting else deltas
+            self._publish_delta(v, node.fn(deltas), rt)
 
     def _full_from_delta(self, p: int, delta: T.Table) -> T.Table:
         """Parent ``p``'s full current content, assembled from its already-
@@ -202,31 +234,54 @@ class IncrementalEngine(ThreadedEngine):
         if self.statuses[p] == STATIC:
             return self.store.read(self.workload.nodes[p].name)
         old = self._old_input(p)
-        return old if self._rows(delta) == 0 else T.concat_tables([old, delta])
+        return old if self._rows(delta) == 0 else T.apply_delta(old, delta)
 
     def _refresh_join(self, v: int, deltas: list[T.Table], rt: _RunState) -> None:
-        """Left-driven delta join: Δout = ΔL ⋈ R_new for every right side,
-        valid only while right-side deltas introduce no new keys; otherwise
-        fall back to a full recompute over the same (already assembled)
-        inputs — the outputs of both branches are bitwise identical, the
-        fallback only costs more."""
+        """Left-driven Z-set delta join, folded across chained right sides:
+        left retractions join each old right, left insertions the new right,
+        and right-side first-occurrence changes (new keys, deletes, updated
+        match payloads) re-join only the affected surviving old-left rows —
+        the *partial fallback*, counted in ``join_fallbacks``. Splicing is
+        by rid, so the left side must carry one; a rid-less left (downstream
+        of an AGG) falls back to a full recompute."""
         node = self.workload.nodes[v]
-        rights_full: list[T.Table] = []
-        appendable = True
-        for p, dp in zip(node.parents[1:], deltas[1:]):
-            old = self._old_input(p)
-            if appendable and not T.join_delta_is_appendable(old["key"], dp):
-                appendable = False
-            rights_full.append(
-                old if self._rows(dp) == 0 else T.concat_tables([old, dp])
-            )
-        if not appendable:
+        left_p = node.parents[0]
+        lname = self.workload.nodes[left_p].name
+        if "rid" not in self.schemas[lname]:
+            self._refresh_full(v, rt)
+            return
+
+        def _memo(fn):
+            cache: list = []
+
+            def get():
+                if not cache:
+                    cache.append(fn())
+                return cache[0]
+            return get
+
+        # old-left content is read (and chained stages' old outputs joined)
+        # lazily: the pure delta rule never pays the historical reads — only
+        # rounds where the right mapping changed (the partial fallback) do
+        get_left = _memo(lambda: self._old_content(left_p))
+        dl = T.with_weight(deltas[0])
+        corrected = 0
+        rights = list(zip(node.parents[1:], deltas[1:]))
+        for j, (p, dp) in enumerate(rights):
+            right_old = self._old_content(p)
+            d_next, n_corr = T.zset_join_delta(get_left, dl, right_old, dp)
+            corrected += n_corr
+            if j + 1 < len(rights):
+                # the next chained stage's old left is this stage's old output
+                prev_get, prev_right = get_left, right_old
+                get_left = _memo(
+                    lambda g=prev_get, r=prev_right: T.op_join(g(), r)
+                )
+            dl = d_next
+        if corrected:
             with self._fb_lock:
                 self.join_fallbacks += 1
-            left_full = self._full_from_delta(node.parents[0], deltas[0])
-            self._publish_replace(v, node.fn([left_full] + rights_full), rt)
-            return
-        self._publish_append(v, node.fn([deltas[0]] + rights_full), rt)
+        self._publish_delta(v, dl, rt)
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +296,10 @@ class RoundReport:
     run: RunReport
     statuses: dict[str, str]
     join_fallbacks: int
+    # per-node full sizes the round's planner saw (round 0: workload sizes;
+    # later rounds: store-manifest observations) — the real-side quantity the
+    # simulator's fed-forward sizes are compared against for parity
+    sizes: tuple[float, ...] = ()
 
     @property
     def elapsed(self) -> float:
@@ -298,6 +357,7 @@ def run_scenario(
     for r in range(spec.n_rounds + 1):
         if r == 0:
             view = workload
+            sizes = [float(n.size) for n in workload.nodes]
         else:
             manifest = store.manifest()
             sizes = [
@@ -329,6 +389,7 @@ def run_scenario(
                     for v, s in engine.statuses.items()
                 },
                 join_fallbacks=engine.join_fallbacks,
+                sizes=tuple(sizes),
             )
         )
     return ScenarioReport(workload=workload.name, spec=spec, rounds=rounds)
@@ -367,6 +428,9 @@ class SimRoundReport:
     mode: str
     plan: Plan
     sim: SimReport
+    # per-node full sizes this round's planner saw (fed forward from the
+    # previous round's modeled full sizes — the simulated store manifest)
+    sizes: tuple[float, ...] = ()
 
     @property
     def end_to_end(self) -> float:
@@ -406,10 +470,18 @@ def simulate_scenario(
 
     Each round's refresh view feeds the shared event engine; ``method="sc"``
     re-solves the plan per round against the view's update-mode speedup
-    scores, ``method="serial"`` is the no-opt baseline."""
+    scores, ``method="serial"`` is the no-opt baseline. Sizes are fed
+    forward round to round — each refresh view is evaluated one round ahead
+    of the previous round's modeled full sizes, exactly how the real
+    ``run_scenario`` re-sizes each round from the store manifest — instead
+    of compounding the analytic growth model from round 0."""
     rounds: list[SimRoundReport] = []
+    sizes = [float(n.size) for n in workload.nodes]
     for r in range(spec.n_rounds + 1):
-        view = workload if r == 0 else incremental_view(workload, spec, r)
+        if r == 0:
+            view = workload
+        else:
+            view = incremental_view(workload, spec, 1, sizes=sizes)
         g = view.to_graph(cost_model)
         if method == "serial":
             plan, mode = serial_plan(g), "serial"
@@ -423,9 +495,14 @@ def simulate_scenario(
         )
         rounds.append(
             SimRoundReport(
-                round_idx=r, mode=spec.mode if r else "build", plan=plan, sim=sim
+                round_idx=r, mode=spec.mode if r else "build", plan=plan,
+                sim=sim, sizes=tuple(sizes),
             )
         )
+        if r > 0:
+            # observed-size feedback: next round plans against this round's
+            # modeled full sizes (the simulated manifest)
+            sizes = [float(s) for s in view.meta["update"]["full_sizes"]]
     return SimScenarioReport(
         workload=workload.name, spec=spec, method=method, rounds=rounds
     )

@@ -11,8 +11,18 @@ apply to the same byte count the cost model and the Memory Catalog account.
 Incremental refresh stores an MV as an ordered sequence of *parts* (the way
 warehouses append Parquet partitions): ``write`` replaces the whole MV with
 a single new part, ``append`` adds one part containing only the delta rows
-(charged at delta bytes), and ``read`` concatenates the manifest-recorded
-parts. Part files carry immutable monotone ids and new content is always
+(charged at delta bytes), and ``read`` *consolidates* the manifest-recorded
+parts. A delta part may be a Z-set: rows carrying a ``weight`` column where
+``-1`` rows are tombstones retracting the stored row with the same rid
+(UPDATE = retraction + reinsertion under one rid, DELETE = bare
+retraction). Consolidation happens on read — each delta part is applied in
+append order (``tableops.apply_delta``: retracted rids drop out,
+insertions splice back in canonical rid order) — while throttle pricing
+stays keyed to the *logical bytes actually read*, tombstones included:
+retraction traffic costs real I/O even though it shrinks the consolidated
+result. ``consolidate`` rewrites a multi-part MV as its single live part
+(atomic at the manifest commit like any write). Part files carry
+immutable monotone ids and new content is always
 written to an id the current manifest does not reference, so every mutation
 commits atomically at the manifest update: a crash beforehand leaves the
 old entry (and its intact files) authoritative, with at most an orphan part
@@ -181,6 +191,16 @@ class DiskStore:
         self._record(name, table_nbytes(delta), new_id, append=True)
         return dt
 
+    def consolidate(self, name: str) -> float:
+        """Rewrite a multi-part MV as its single consolidated live part,
+        dropping tombstones and retracted rows. Atomic at the manifest
+        commit (a crash mid-way leaves the old parts authoritative); the
+        manifest's byte count shrinks to the live content. Returns elapsed
+        seconds (0.0 when already single-part)."""
+        if self.parts(name) <= 1:
+            return 0.0
+        return self.write(name, self.read(name))
+
     def _load_part(self, name: str, part_id: int) -> dict[str, np.ndarray]:
         with np.load(self._path(name, part_id)) as z:
             return {k: z[k] for k in z.files}
@@ -197,9 +217,18 @@ class DiskStore:
     def read_parts(
         self, name: str, start: int = 0, stop: int | None = None
     ) -> dict[str, np.ndarray]:
-        """Concatenate parts ``[start, stop)`` (default: all) in append order.
-        Reading a prefix is how incremental execution recovers the pre-round
-        content of an appended MV; reading a suffix recovers its delta."""
+        """Read parts ``[start, stop)`` (default: all) in append order.
+
+        Reading from part 0 consolidates: each later part is applied as a
+        Z-set delta (tombstone rids drop the rows they retract, insertions
+        splice back in rid order, weight columns are stripped) — the caller
+        sees live content. Reading a suffix (``start > 0``) recovers one
+        round's raw delta, weights intact, which is how incremental
+        execution recovers "this round's update" of a parent. Throttling
+        charges the logical bytes of every part actually read — tombstones
+        included — not the (smaller) consolidated result."""
+        from . import tableops as T
+
         t0 = time.perf_counter()
         if self.latency:
             time.sleep(self.latency)
@@ -207,14 +236,17 @@ class DiskStore:
         loaded = [self._load_part(name, p) for p in ids[start:stop]]
         if not loaded:
             raise KeyError(f"{name}: no parts in [{start}, {stop})")
-        if len(loaded) == 1:
+        raw_bytes = sum(table_nbytes(p) for p in loaded)
+        if start == 0:
+            first = loaded[0]
+            out = T.materialize_delta(first) if T.WEIGHT_COL in first else first
+            for part in loaded[1:]:
+                out = T.apply_delta(out, part)
+        elif len(loaded) == 1:
             out = loaded[0]
         else:
-            out = {
-                k: np.concatenate([np.asarray(p[k]) for p in loaded])
-                for k in loaded[0]
-            }
-        self._throttle_read(t0, table_nbytes(out))
+            out = T.concat_tables(loaded)
+        self._throttle_read(t0, raw_bytes)
         dt = time.perf_counter() - t0
         with self._io_lock:
             self.read_seconds += dt

@@ -12,30 +12,45 @@ These run the *real-execution* experiments: the Controller materializes their
 outputs through the DiskStore / MemoryCatalog, and results must be bitwise
 identical between serial, short-circuit, and incremental-refresh runs.
 
-Incremental refresh (insert-only deltas, DESIGN.md §5)
-------------------------------------------------------
+Incremental refresh (Z-set weighted-row deltas, DESIGN.md §5-6)
+---------------------------------------------------------------
 Base-table rows carry a ``rid`` column: a globally unique row id that is
 monotone in the ingestion round (all rows inserted at round ``r`` sort after
-every row from rounds ``< r``). The operators are written so that, for
-insert-only input deltas, each one admits an exact delta rule:
+every row from rounds ``< r``); updates keep their rid, so an updated row
+stays at its original position in the canonical rid order. A *delta* is a
+Z-set: a table with a ``weight`` meta column in {-1, +1} where ``+1`` rows
+are insertions and ``-1`` rows are *retractions* carrying the exact payload
+of the stored row they cancel (an UPDATE is a retraction plus an insertion
+under the same rid; a DELETE is a bare retraction). ``apply_delta``
+consolidates a Z-set delta into the stored content: retracted rids are
+removed, insertions are spliced in, and the result is kept in the canonical
+stable rid order — which is exactly the row order a full recompute
+produces, so incremental refresh stays bitwise comparable.
 
-* FILTER / PROJECT / MAP are per-row / per-column: ``op(old ++ Δ) ==
-  op(old) ++ op(Δ)`` bitwise.
+Per-operator delta rules:
+
+* FILTER / PROJECT / MAP are per-row / per-column: the operator applied to
+  the weighted delta IS the output delta (weights pass through; a
+  retraction survives the filter iff its old payload did).
 * JOIN is left-driven (output rows follow left input order; the right side
-  is a PK-style first-occurrence index). Appending ``ΔR`` whose keys are all
-  already present in ``R`` cannot change the first occurrence per key, so
-  ``join(L, R ++ ΔR) == join(L, R)`` and ``Δout == join(ΔL, R ++ ΔR)``.
-  A ``ΔR`` that introduces *new* keys can match old left rows mid-stream;
-  that case is detected at runtime and falls back to a full recompute.
-* UNION sorts its output by ``rid`` (when both inputs carry one). Because
-  delta rids are strictly larger than all old rids, the merged output is
-  ``union(oldL, oldR) ++ union(ΔL, ΔR)`` — append-only again.
+  is a PK-style first-occurrence index), and weights multiply through the
+  PK join. ``zset_join_delta`` joins left retractions against the *old*
+  right (exact old payloads) and left insertions against the new right;
+  right-side deltas that change the first-occurrence mapping of a key —
+  new keys, deleted keys, updated payloads — trigger a *partial fallback*
+  that re-joins only the affected surviving old-left rows and splices the
+  corrections by rid, instead of recomputing the whole node.
+* UNION sorts its output by ``rid`` (when both inputs carry one); the union
+  of Z-set deltas is the rid-consolidated concatenation of the input
+  deltas, spliced by ``apply_delta`` like any other weighted delta.
 * AGG keeps *mergeable partial aggregates*: per-key ``sum_*`` columns are
   accumulated in fixed-point int64 (quantum ``1/AGG_QUANTUM``) so addition
-  is exactly associative, and ``count`` is an exact int64. Hence
-  ``merge_agg(agg(old), agg(Δ)) == agg(old ++ Δ)`` bitwise — the algebraic
-  property incremental AGG refresh needs. Floating-point segment sums do
-  not commute with merging, which is why the sums are quantized.
+  is exactly associative, and ``count`` is an exact int64. Weighted rows
+  contribute ``weight * fixed_point(v)`` — retraction subtracts exactly
+  what the original insertion added — hence ``merge_agg(agg(old), agg(Δ±))
+  == agg(full)`` bitwise, with groups whose merged count reaches zero
+  dropped (a full recompute never sees them). Floating-point segment sums
+  do not commute with merging, which is why the sums are quantized.
 """
 from __future__ import annotations
 
@@ -46,8 +61,10 @@ import numpy as np
 Table = dict[str, np.ndarray]
 
 # Columns that are bookkeeping, not data: excluded from MAP inputs and AGG
-# measures (they still group/join/sort like any other column).
-META_COLS = ("key", "rid")
+# measures (they still group/join/sort like any other column). ``weight`` is
+# the Z-set multiplicity of a delta row: +1 insertion, -1 retraction.
+WEIGHT_COL = "weight"
+META_COLS = ("key", "rid", WEIGHT_COL)
 
 # Fixed-point quantum for AGG sums: values are accumulated as
 # round(v * AGG_QUANTUM) in int64, so per-key sums are exactly associative
@@ -86,6 +103,142 @@ def data_cols(table: Table) -> list[str]:
     return [k for k in table if k not in META_COLS]
 
 
+# ---------------------------------------------------------------------------
+# Z-set (weighted-row) delta primitives
+# ---------------------------------------------------------------------------
+
+def n_rows(table: Table) -> int:
+    return len(np.asarray(next(iter(table.values())))) if table else 0
+
+
+def weights_of(table: Table) -> np.ndarray:
+    """The Z-set weight vector of a delta (implicit all-+1 when absent)."""
+    if WEIGHT_COL in table:
+        return np.asarray(table[WEIGHT_COL], np.int64)
+    return np.ones(n_rows(table), np.int64)
+
+
+def with_weight(table: Table, weight: int = 1) -> Table:
+    """Table with an explicit int64 weight column (existing one is kept only
+    when ``weight`` is the default +1; otherwise it is overwritten)."""
+    out = dict(table)
+    if WEIGHT_COL not in out or weight != 1:
+        out[WEIGHT_COL] = np.full(n_rows(table), weight, np.int64)
+    return out
+
+
+def strip_weight(table: Table) -> Table:
+    return {k: v for k, v in table.items() if k != WEIGHT_COL}
+
+
+def take_rows(table: Table, idx: np.ndarray) -> Table:
+    return {k: np.asarray(v)[idx] for k, v in table.items()}
+
+
+def apply_delta(old: Table, delta: Table) -> Table:
+    """Consolidate a Z-set delta into stored content.
+
+    Rows of ``old`` whose rid carries a retraction are removed, ``+1`` rows
+    are inserted, and the result is restored to the canonical stable rid
+    order — updates land back at their original position, join corrections
+    splice mid-stream, and pure appends (delta rids all larger) reduce to
+    the plain concatenation of the insert-only model. ``old`` carries no
+    weight column (it is stored content); the returned table doesn't
+    either. Retractions require a rid on both sides to match by.
+    """
+    if not delta or n_rows(delta) == 0:
+        return dict(old)
+    w = weights_of(delta)
+    neg = w < 0
+    pos_idx = np.nonzero(w > 0)[0]
+    missing = [k for k in old if k not in delta]
+    if missing:
+        raise ValueError(f"delta lacks columns {missing} of the target table")
+    if "rid" not in old:
+        if neg.any():
+            raise ValueError("retraction delta needs a rid column to match by")
+        return {
+            k: np.concatenate([np.asarray(old[k]), np.asarray(delta[k])[pos_idx]])
+            for k in old
+        }
+    retracted = np.asarray(delta["rid"])[neg]
+    old_rid = np.asarray(old["rid"])
+    ins_rid = np.asarray(delta["rid"])[pos_idx]
+    if not retracted.size and (
+        not len(old_rid) or not ins_rid.size or ins_rid.min() > old_rid[-1]
+    ):
+        # pure append (round-monotone insert rids): the stable rid sort is a
+        # no-op, skip it — this is the hot path of insert-only refresh
+        return {
+            k: np.concatenate([np.asarray(old[k]), np.asarray(delta[k])[pos_idx]])
+            for k in old
+        }
+    if retracted.size:
+        keep = np.nonzero(~np.isin(old_rid, retracted))[0]
+    else:
+        keep = np.arange(len(old_rid))
+    merged = {
+        k: np.concatenate([np.asarray(old[k])[keep], np.asarray(delta[k])[pos_idx]])
+        for k in old
+    }
+    order = np.argsort(merged["rid"], kind="stable")
+    return {k: v[order] for k, v in merged.items()}
+
+
+def materialize_delta(delta: Table) -> Table:
+    """Live content of a Z-set delta standing alone (an MV whose first-ever
+    part is a delta): applied onto an empty base, weight column stripped."""
+    base = {k: np.asarray(v)[:0] for k, v in delta.items() if k != WEIGHT_COL}
+    return apply_delta(base, delta)
+
+
+def _row_bytes_equal(a: Table, ai: np.ndarray, b: Table, bi: np.ndarray,
+                     cols: list[str]) -> np.ndarray:
+    """Per-row bitwise equality of ``a[ai]`` vs ``b[bi]`` over ``cols``
+    (value equality is not enough: -0.0 vs 0.0 must count as a change)."""
+    eq = np.ones(len(ai), bool)
+    for c in cols:
+        va = np.ascontiguousarray(np.asarray(a[c])[ai])
+        vb = np.ascontiguousarray(np.asarray(b[c])[bi])
+        ba = va.view(np.uint8).reshape(len(ai), -1)
+        bb = vb.view(np.uint8).reshape(len(bi), -1)
+        eq &= (ba == bb).all(axis=1)
+    return eq
+
+
+def consolidate_zset(delta: Table) -> Table:
+    """Cancel exact no-op pairs in a Z-set delta: a retraction and an
+    insertion under the same (unique-per-sign) rid with bitwise-identical
+    payloads change nothing when applied, so both rows can be dropped.
+    Leaves everything else (order included) untouched."""
+    if WEIGHT_COL not in delta or "rid" not in delta or n_rows(delta) == 0:
+        return delta
+    w = weights_of(delta)
+    rid = np.asarray(delta["rid"])
+    neg_idx, pos_idx = np.nonzero(w < 0)[0], np.nonzero(w > 0)[0]
+    if not neg_idx.size or not pos_idx.size:
+        return delta
+    # only rids unique within each sign are safely cancellable
+    def _unique_only(idx):
+        r = rid[idx]
+        uniq, counts = np.unique(r, return_counts=True)
+        return idx[np.isin(r, uniq[counts == 1])]
+
+    neg_u, pos_u = _unique_only(neg_idx), _unique_only(pos_idx)
+    common, ni, pi = np.intersect1d(
+        rid[neg_u], rid[pos_u], assume_unique=True, return_indices=True
+    )
+    if not common.size:
+        return delta
+    cols = [k for k in delta if k not in (WEIGHT_COL, "rid")]
+    same = _row_bytes_equal(delta, neg_u[ni], delta, pos_u[pi], cols)
+    drop = np.concatenate([neg_u[ni][same], pos_u[pi][same]])
+    if not drop.size:
+        return delta
+    keep = np.setdiff1d(np.arange(len(rid)), drop)
+    return take_rows(delta, keep)
+
+
 @jax.jit
 def _filter_mask(col: jnp.ndarray, threshold: float) -> jnp.ndarray:
     return col > threshold
@@ -102,15 +255,18 @@ def op_filter(table: Table, col: str = "c0", threshold: float = 0.0) -> Table:
 
 
 def op_project(table: Table, keep_frac: float = 0.5) -> Table:
-    cols = list(table)
+    # the weight column is delta bookkeeping: it always survives and never
+    # counts toward the projection width, so a weighted delta keeps exactly
+    # the columns the full-table projection keeps
+    cols = [k for k in table if k != WEIGHT_COL]
     keep = max(1, int(round(len(cols) * keep_frac)))
     # meta columns always survive projection (key for joins/aggs, rid for the
     # incremental-union ordering); data columns fill the remaining width
     metas = [k for k in cols if k in META_COLS]
     data = [k for k in cols if k not in META_COLS]
     width = max(keep - len(metas), 0)
-    kept = set(metas) | set(data[:width])
-    return {k: table[k] for k in cols if k in kept}
+    kept = set(metas) | set(data[:width]) | {WEIGHT_COL}
+    return {k: table[k] for k in table if k in kept}
 
 
 def _softsign(x: np.ndarray) -> np.ndarray:
@@ -136,6 +292,14 @@ def op_map(table: Table) -> Table:
     return out
 
 
+def _first_occurrence_index(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(sorted unique keys, row index of each key's first occurrence) — the
+    PK-style probe index every right join side is reduced to."""
+    order = np.argsort(keys, kind="stable")
+    uniq, first = np.unique(keys[order], return_index=True)
+    return uniq, order[first]
+
+
 def op_join(left: Table, right: Table) -> Table:
     """Inner equi-join on 'key' (sort-merge, host index building + gather).
 
@@ -143,14 +307,11 @@ def op_join(left: Table, right: Table) -> Table:
     contributes its *first occurrence* per key (PK-style join). Stability of
     the first occurrence under right-side appends is what makes the
     incremental delta rule exact (module docstring). The right side's own
-    meta columns are dropped — the output's rid is the left's.
+    meta columns are dropped — the output's rid (and Z-set weight, when the
+    left is a weighted delta) are the left's.
     """
     lk, rk = np.asarray(left["key"]), np.asarray(right["key"])
-    # build right index: first occurrence per key (PK-style join)
-    order = np.argsort(rk, kind="stable")
-    rk_sorted = rk[order]
-    uniq, first = np.unique(rk_sorted, return_index=True)
-    ridx_for = order[first]
+    uniq, ridx_for = _first_occurrence_index(rk)
     pos = np.searchsorted(uniq, lk)
     pos = np.clip(pos, 0, len(uniq) - 1)
     matched = uniq[pos] == lk if len(uniq) else np.zeros(len(lk), bool)
@@ -168,11 +329,126 @@ def op_join(left: Table, right: Table) -> Table:
 
 def join_delta_is_appendable(right_old_keys: np.ndarray, right_delta: Table) -> bool:
     """True iff appending ``right_delta`` cannot change existing join matches
-    (no key in the delta is new). The runtime gate for the JOIN delta rule."""
+    (insert-only, and no key in the delta is new) — equivalently, iff
+    ``zset_join_delta`` will emit no corrections for it. The engine no
+    longer gates on this predicate (the partial fallback handles every
+    case); it remains the algebraic statement of the append-only rule."""
     dk = np.asarray(right_delta["key"])
     if dk.size == 0:
         return True
+    if (weights_of(right_delta) < 0).any():
+        return False
     return bool(np.isin(dk, np.asarray(right_old_keys)).all())
+
+
+def _right_mapping_changes(
+    right_old: Table, right_new: Table, candidates: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Candidate join keys whose PK first-occurrence mapping changed between
+    the old and new right side: (keys needing retraction of old matches,
+    keys needing insertion of new matches). A key appears in both when its
+    match payload changed (UPDATE), in one when it appeared or vanished."""
+    uo, io = _first_occurrence_index(np.asarray(right_old["key"]))
+    un, inw = _first_occurrence_index(np.asarray(right_new["key"]))
+
+    def _lookup(uniq, probe):
+        pos = np.searchsorted(uniq, probe)
+        pos = np.clip(pos, 0, max(len(uniq) - 1, 0))
+        hit = uniq[pos] == probe if len(uniq) else np.zeros(len(probe), bool)
+        return hit, pos
+    old_has, opos = _lookup(uo, candidates)
+    new_has, npos = _lookup(un, candidates)
+    both = old_has & new_has
+    changed = np.zeros(len(candidates), bool)
+    if both.any():
+        cols = [k for k in right_old if k not in META_COLS]
+        changed[both] = ~_row_bytes_equal(
+            right_old, io[opos[both]], right_new, inw[npos[both]], cols
+        )
+    retract = candidates[(old_has & ~new_has) | changed]
+    insert = candidates[(new_has & ~old_has) | changed]
+    return retract, insert
+
+
+def zset_join_delta(
+    left_old, left_delta: Table, right_old: Table, right_delta: Table
+) -> tuple[Table, int]:
+    """Weighted delta of ``op_join(left, right)`` given Z-set deltas of both
+    sides; returns ``(delta, corrected_rows)``.
+
+    Left retractions join the *old* right side (reproducing the exact old
+    output payloads), left insertions join the new right side, and weights
+    pass through the PK join. When the right delta changes a key's
+    first-occurrence mapping — a new key matching old left rows, a deleted
+    key unmatching them, or an updated match payload — the *partial
+    fallback* re-joins only the affected old-left rows that survive this
+    round's left retractions, emitting retract/insert corrections that
+    ``apply_delta`` splices back by rid. ``corrected_rows`` counts those
+    correction rows (0 = the pure delta rule sufficed).
+
+    ``left_old`` may be a Table or a zero-arg callable returning one: the
+    old left side is only needed (and a callable only invoked) when the
+    right mapping actually changed — the pure delta rule never pays the
+    historical left read.
+    """
+    lo_memo: list = [left_old if not callable(left_old) else None]
+
+    def _left_old() -> Table:
+        if lo_memo[0] is None:
+            lo_memo[0] = left_old()
+        return lo_memo[0]
+
+    right_new = apply_delta(right_old, right_delta)
+    w = weights_of(left_delta)
+    parts: list[Table] = []
+    neg_idx, pos_idx = np.nonzero(w < 0)[0], np.nonzero(w > 0)[0]
+    if neg_idx.size:
+        parts.append(op_join(take_rows(with_weight(left_delta), neg_idx), right_old))
+    if pos_idx.size:
+        parts.append(op_join(take_rows(with_weight(left_delta), pos_idx), right_new))
+    corrected = 0
+    cand = np.unique(np.asarray(right_delta["key"])) if (
+        right_delta and n_rows(right_delta)
+    ) else np.empty(0, np.int64)
+    if cand.size:
+        retract_keys, insert_keys = _right_mapping_changes(
+            right_old, right_new, cand
+        )
+        if retract_keys.size or insert_keys.size:
+            # old-left rows still standing after this round's left retractions
+            lo = _left_old()
+            l_rid = np.asarray(lo["rid"])
+            l_retracted = np.asarray(left_delta["rid"])[w < 0] if neg_idx.size \
+                else np.empty(0, l_rid.dtype)
+            rem = ~np.isin(l_rid, l_retracted) if l_retracted.size else \
+                np.ones(len(l_rid), bool)
+            l_keys = np.asarray(lo["key"])
+            if retract_keys.size:
+                sub = np.nonzero(rem & np.isin(l_keys, retract_keys))[0]
+                if sub.size:
+                    corr = op_join(
+                        with_weight(take_rows(lo, sub), -1), right_old
+                    )
+                    corrected += n_rows(corr)
+                    parts.append(corr)
+            if insert_keys.size:
+                sub = np.nonzero(rem & np.isin(l_keys, insert_keys))[0]
+                if sub.size:
+                    corr = op_join(
+                        with_weight(take_rows(lo, sub), +1), right_new
+                    )
+                    corrected += n_rows(corr)
+                    parts.append(corr)
+    if not parts:
+        # schema-only result: an empty slice of the left delta (same columns
+        # as the left side) joined against the right — no left read needed
+        empty_left = take_rows(with_weight(left_delta), np.empty(0, np.int64))
+        return op_join(empty_left, right_old), 0
+    out = concat_tables(parts)
+    if "rid" in out:
+        order = np.argsort(np.asarray(out["rid"]), kind="stable")
+        out = {k: np.asarray(v)[order] for k, v in out.items()}
+    return out, corrected
 
 
 def _fixed_point(v: np.ndarray) -> np.ndarray:
@@ -186,8 +462,16 @@ def op_agg(table: Table) -> Table:
     back as float64 — a deterministic function of the exact integer sum, so
     aggregation is associative and ``merge_agg`` is bitwise-exact. ``count``
     is int64 (an int32 accumulator overflows past 2^31 rows).
+
+    On a Z-set delta (a ``weight`` column present) every row contributes
+    ``weight * fixed_point(v)`` to its group's sums and ``weight`` to its
+    count: a retraction subtracts exactly the integer its insertion added,
+    so the result is the signed partial aggregate ``merge_agg`` needs.
+    Groups whose delta-local count nets to zero are kept — they may still
+    carry sum corrections (an update that moved a value but not its key).
     """
     keys = np.asarray(table["key"])
+    w = weights_of(table) if WEIGHT_COL in table else None
     uniq, inv = np.unique(keys, return_inverse=True)
     n = len(uniq)
     out: Table = {"key": uniq}
@@ -195,16 +479,25 @@ def op_agg(table: Table) -> Table:
         v = np.asarray(table[k])
         if np.issubdtype(v.dtype, np.number):
             acc = np.zeros(n, np.int64)
-            np.add.at(acc, inv, _fixed_point(v))
+            fp = _fixed_point(v)
+            np.add.at(acc, inv, fp if w is None else fp * w)
             out[f"sum_{k}"] = acc.astype(np.float64) / AGG_QUANTUM
-    out["count"] = np.bincount(inv, minlength=n).astype(np.int64)
+    if w is None:
+        out["count"] = np.bincount(inv, minlength=n).astype(np.int64)
+    else:
+        cnt = np.zeros(n, np.int64)
+        np.add.at(cnt, inv, w)
+        out["count"] = cnt
     return out
 
 
 def merge_agg(old: Table, delta: Table) -> Table:
     """Merge two partial aggregates: ``merge_agg(agg(a), agg(b)) == agg(a++b)``
     bitwise (sums re-enter fixed-point, so addition is exact; counts are
-    int64). Key order of the result is sorted-unique, matching ``op_agg``."""
+    int64). ``delta`` may be a *signed* partial aggregate (``op_agg`` of a
+    Z-set delta): groups whose merged count reaches zero have no surviving
+    rows and are dropped, exactly as a full recompute would never emit
+    them. Key order of the result is sorted-unique, matching ``op_agg``."""
     ok, dk = np.asarray(old["key"]), np.asarray(delta["key"])
     uniq = np.union1d(ok, dk)
     oi = np.searchsorted(uniq, ok)
@@ -227,18 +520,25 @@ def merge_agg(old: Table, delta: Table) -> Table:
             if dv is not None:
                 acc[di] += _fixed_point(dv)
             out[col] = acc.astype(np.float64) / AGG_QUANTUM
+    live = out["count"] != 0
+    if not live.all():
+        out = {k: np.asarray(v)[live] for k, v in out.items()}
     return out
 
 
 def op_union(left: Table, right: Table) -> Table:
     """Union of the common columns. When both sides carry a ``rid``, rows are
-    ordered by it — the canonical order that makes incremental refresh
-    append-only (delta rids are strictly larger than all old rids)."""
+    ordered by it — the canonical order that makes incremental refresh a
+    rid-spliced delta (pure inserts land after all old rids, so the
+    insert-only case stays append-only). Weighted delta inputs consolidate:
+    exact no-op retract/insert pairs cancel by rid."""
     common = [k for k in left if k in right]
     out = {k: np.concatenate([np.asarray(left[k]), np.asarray(right[k])]) for k in common}
     if "rid" in out:
         order = np.argsort(out["rid"], kind="stable")
         out = {k: v[order] for k, v in out.items()}
+    if WEIGHT_COL in out:
+        out = consolidate_zset(out)
     return out
 
 
@@ -252,11 +552,20 @@ def table_schema(table: Table) -> dict[str, np.dtype]:
 
 
 def concat_tables(parts: list[Table]) -> Table:
-    """Column-wise concatenation of same-schema tables (store parts)."""
+    """Column-wise concatenation of same-schema tables (store parts).
+
+    When any part carries Z-set weights, every part is normalized to an
+    explicit weight column and the result is consolidated by rid (exact
+    no-op retract/insert pairs cancel) — concatenating weighted deltas
+    yields one canonical weighted delta."""
     if not parts:
         raise ValueError("concat_tables needs at least one part")
     if len(parts) == 1:
         return dict(parts[0])
-    return {
+    weighted = any(WEIGHT_COL in p for p in parts)
+    if weighted:
+        parts = [with_weight(p) for p in parts]
+    out = {
         k: np.concatenate([np.asarray(p[k]) for p in parts]) for k in parts[0]
     }
+    return consolidate_zset(out) if weighted else out

@@ -16,6 +16,8 @@ import math
 import random
 from typing import Callable, Sequence
 
+import numpy as np
+
 from ..core.graph import MVGraph
 from ..core.speedup import EFFECTIVE_NFS_COST_MODEL, PAPER_COST_MODEL, CostModel
 
@@ -107,8 +109,9 @@ class MVNode:
     base_read: float = 0.0  # bytes scanned from base tables (SCAN nodes);
     # base tables are never in the Memory Catalog, so this cost is identical
     # under every method — it is what partitioning (TPC-DSp) shrinks.
-    delta_fn: Callable | None = None  # SCAN ingestion: delta_fn(round, frac)
-    # -> Table of the rows ingested at that round (round 0 = initial load)
+    delta_fn: Callable | None = None  # SCAN ingestion: delta_fn(round, spec)
+    # -> Z-set delta of the rows changed at that round (round 0 = initial
+    # load; spec is an UpdateSpec or a bare insert-only ingest fraction)
 
 
 @dataclasses.dataclass
@@ -174,10 +177,16 @@ class UpdateSpec:
     """How a workload is refreshed after its initial build.
 
     ``mode="full"`` recomputes every MV from its complete inputs each round;
-    ``mode="incremental"`` propagates insert-only deltas through the
-    delta-supporting operators (DESIGN.md §5). ``ingest_frac`` is the
-    fraction of each ingesting base table's initial rows appended per round;
-    ``ingest`` selects which scan nodes receive new data (None = every
+    ``mode="incremental"`` propagates Z-set weighted-row deltas through the
+    delta-supporting operators (DESIGN.md §5-6). Per refresh round each
+    ingesting scan:
+
+    * appends ``ingest_frac`` of its initial rows as new rows (INSERT),
+    * rewrites ``update_frac`` of its live rows in place — same rid, fresh
+      key/values — as retract+insert pairs (UPDATE),
+    * retracts ``delete_frac`` of its live rows (DELETE).
+
+    ``ingest`` selects which scan nodes receive changes (None = every
     root — the default models fact-and-dimension feeds all landing data;
     pass a subset to model static dimension tables, whose untouched
     subtrees are skipped entirely).
@@ -187,12 +196,22 @@ class UpdateSpec:
     ingest_frac: float = 0.1
     n_rounds: int = 3
     ingest: tuple[int, ...] | None = None
+    update_frac: float = 0.0
+    delete_frac: float = 0.0
 
     def __post_init__(self):
         if self.mode not in ("full", "incremental"):
             raise ValueError(f"unknown update mode {self.mode!r}")
-        if not (0.0 < self.ingest_frac <= 1.0):
-            raise ValueError("ingest_frac must be in (0, 1]")
+        if not (0.0 <= self.ingest_frac <= 1.0):
+            raise ValueError("ingest_frac must be in [0, 1]")
+        if not (0.0 <= self.update_frac < 1.0):
+            raise ValueError("update_frac must be in [0, 1)")
+        if not (0.0 <= self.delete_frac < 1.0):
+            raise ValueError("delete_frac must be in [0, 1)")
+        if self.ingest_frac + self.update_frac + self.delete_frac <= 0.0:
+            raise ValueError(
+                "at least one of ingest/update/delete_frac must be positive"
+            )
 
     def resolve_ingest(self, workload: Workload) -> frozenset[int]:
         if self.ingest is not None:
@@ -232,6 +251,8 @@ def incremental_view(
         spec.ingest_frac,
         round_idx=round_idx,
         mode=spec.mode,
+        update_frac=spec.update_frac,
+        delete_frac=spec.delete_frac,
     )
     nodes = [
         dataclasses.replace(
@@ -247,6 +268,8 @@ def incremental_view(
         mode=spec.mode,
         round=round_idx,
         ingest_frac=spec.ingest_frac,
+        update_frac=spec.update_frac,
+        delete_frac=spec.delete_frac,
         statuses=upd.statuses,
         full_sizes=upd.full_sizes,
         lineage=upd.lineage,
@@ -489,11 +512,15 @@ def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
 
     Every base-table row carries a globally unique, round-monotone ``rid``
     (tableops module docstring), and each SCAN node gets a ``delta_fn(round,
-    frac)`` generating that round's ingested rows deterministically — the
-    same rows under full and incremental refresh, so the two modes are
-    bitwise comparable. ``key_mod`` overrides the join-key range: small
-    values saturate the key space (right-side deltas carry no new keys, the
-    JOIN delta rule applies), huge values force the new-key fallback path.
+    spec)`` generating that round's Z-set delta deterministically — the same
+    weighted rows under full and incremental refresh, so the two modes are
+    bitwise comparable. ``spec`` is an ``UpdateSpec`` (a bare float is
+    accepted as an insert-only ingest fraction); round 0 is the initial,
+    weightless load. UPDATE rows keep their rid but redraw key and values
+    (exercising join re-matches and aggregate group moves); DELETE rows are
+    bare retractions. ``key_mod`` overrides the join-key range: small values
+    saturate the key space (right-side deltas carry no new keys, the pure
+    JOIN delta rule applies), huge values force the partial-fallback path.
     """
     from . import tableops as T
 
@@ -501,15 +528,85 @@ def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
     kmod = key_mod or max(rows // 4, 4)
 
     def make_delta_fn(i: int):
-        def delta_fn(round_idx: int, frac: float = 0.1):
-            n = rows if round_idx == 0 else max(int(rows * frac), 1)
+        def base_seed(j: int) -> int:
+            return (seed * 1000 + i) * 1009 + j
+
+        def initial_load() -> "dict":
             return T.make_base_table(
-                n,
-                n_cols,
-                seed=(seed * 1000 + i) * 1009 + round_idx,
-                key_mod=kmod,
-                rid_base=T.make_rid_base(round_idx, i),
+                rows, n_cols, seed=base_seed(0), key_mod=kmod,
+                rid_base=T.make_rid_base(0, i),
             )
+
+        def delta_from_live(live: "dict", round_idx: int, ingest: float,
+                            update: float, delete: float) -> "dict":
+            """Round ``round_idx``'s Z-set delta given the scan's live state
+            after rounds ``< round_idx`` (deterministic in seed + round)."""
+            rng = np.random.default_rng(base_seed(round_idx) * 2 + 1)
+            n_live = len(live["key"])
+            n_del = int(n_live * delete)
+            n_upd = int(n_live * update)
+            perm = rng.permutation(n_live)
+            del_idx = np.sort(perm[:n_del])
+            upd_idx = np.sort(perm[n_del:n_del + n_upd])
+            parts: list[dict] = []
+            retract_idx = np.sort(np.concatenate([del_idx, upd_idx]))
+            if retract_idx.size:
+                parts.append(T.with_weight(T.take_rows(live, retract_idx), -1))
+            if upd_idx.size:
+                upd_rows: dict = {}
+                for col in live:
+                    if col == "key":
+                        upd_rows[col] = rng.integers(0, kmod, n_upd).astype(np.int64)
+                    elif col == "rid":
+                        upd_rows[col] = np.asarray(live["rid"])[upd_idx]
+                    else:
+                        upd_rows[col] = rng.standard_normal(n_upd).astype(np.float32)
+                parts.append(upd_rows)
+            n_ins = max(int(rows * ingest), 1) if ingest > 0 else 0
+            if n_ins:
+                parts.append(T.make_base_table(
+                    n_ins, n_cols, seed=base_seed(round_idx), key_mod=kmod,
+                    rid_base=T.make_rid_base(round_idx, i),
+                ))
+            if not parts:
+                return T.empty_like(T.table_schema(live))
+            if retract_idx.size:
+                # retractions present: every part carries an explicit weight
+                parts = [T.with_weight(p) for p in parts]
+            # pure inserts stay weightless — no phantom weight bytes in
+            # insert-only scenarios (deltas without a weight column are
+            # implicitly all-+1 everywhere)
+            return parts[0] if len(parts) == 1 else {
+                k: np.concatenate([np.asarray(p[k]) for p in parts])
+                for k in parts[0]
+            }
+
+        # per-frac-mix memo of live states: lives[r] = content after round r
+        # (replay is deterministic, so caching is purely an optimization —
+        # scenarios call rounds 1..R in order and pay one apply_delta each
+        # instead of replaying from the initial load every call)
+        live_memo: dict[tuple, list] = {}
+
+        def delta_fn(round_idx: int, spec=0.1):
+            if isinstance(spec, UpdateSpec):
+                ingest, update, delete = (
+                    spec.ingest_frac, spec.update_frac, spec.delete_frac
+                )
+            else:
+                ingest, update, delete = float(spec), 0.0, 0.0
+            if round_idx == 0:
+                return initial_load()
+            lives = live_memo.setdefault((ingest, update, delete),
+                                         [initial_load()])
+            while len(lives) < round_idx:
+                j = len(lives)
+                lives.append(T.apply_delta(
+                    lives[-1], delta_from_live(lives[-1], j, ingest, update,
+                                               delete)
+                ))
+            return delta_from_live(lives[round_idx - 1], round_idx, ingest,
+                                   update, delete)
+
         return delta_fn
 
     def make_fn(i: int, node: MVNode):

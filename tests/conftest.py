@@ -1,17 +1,32 @@
 """Shared test configuration.
 
-Provides a minimal stand-in for ``hypothesis`` when the real package is not
-installed: ``given``/``settings``/``strategies`` run a fixed, deterministic
-sample of drawn cases, so the property tests still collect and execute (with
-reduced case coverage) on dependency-free environments. With ``hypothesis``
-installed this module is a no-op and the real library is used.
+With ``hypothesis`` installed, registers two fixed profiles and loads the
+one named by ``$HYPOTHESIS_PROFILE`` (default ``dev``):
+
+* ``ci``  — deadline disabled (shared-runner timing jitter must not fail
+  property tests) and ``derandomize=True`` (explicit seed derandomization:
+  every run draws the same deterministic example sequence, so a CI failure
+  reproduces locally byte for byte);
+* ``dev`` — deadline disabled only.
+
+When the real package is not installed, provides a minimal stand-in:
+``given``/``settings``/``strategies`` run a fixed, deterministic sample of
+drawn cases (seeded from the test identity — effectively always
+derandomized), so the property tests still collect and execute (with
+reduced case coverage) on dependency-free environments.
 """
 from __future__ import annotations
 
+import os
 import sys
 
 try:  # pragma: no cover - exercised only when hypothesis is present
     import hypothesis  # noqa: F401
+    from hypothesis import settings as _hsettings
+
+    _hsettings.register_profile("ci", deadline=None, derandomize=True)
+    _hsettings.register_profile("dev", deadline=None)
+    _hsettings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
 except ModuleNotFoundError:
     import random
     import types

@@ -130,6 +130,112 @@ def test_diskstore_rewrite_of_multipart_mv_is_crash_atomic(tmp_path):
     assert store.parts("mv") == 1
 
 
+def _zset(rids, weight, **cols):
+    t = {"rid": np.asarray(rids, np.int64),
+         "weight": np.full(len(rids), weight, np.int64)}
+    for k, v in cols.items():
+        t[k] = np.asarray(v)
+    return t
+
+
+def test_diskstore_tombstone_append_retract_consolidate_roundtrip(tmp_path):
+    """Z-set delta parts: updates splice at their old rid, deletes drop out,
+    and reads consolidate — weight columns never reach the caller."""
+    store = DiskStore(tmp_path)
+    base = {"rid": np.arange(6, dtype=np.int64),
+            "x": np.arange(6, dtype=np.float32)}
+    store.write("mv", base)
+    # round 1: update rid 1 (retract + reinsert), delete rid 4, insert rid 10
+    d1 = {
+        "rid": np.array([1, 4, 1, 10], np.int64),
+        "weight": np.array([-1, -1, 1, 1], np.int64),
+        "x": np.array([1.0, 4.0, 99.0, 10.0], np.float32),
+    }
+    store.append("mv", d1)
+    assert store.parts("mv") == 2
+    out = store.read("mv")
+    assert "weight" not in out
+    np.testing.assert_array_equal(out["rid"], [0, 1, 2, 3, 5, 10])
+    np.testing.assert_array_equal(
+        out["x"], np.array([0, 99, 2, 3, 5, 10], np.float32)
+    )
+    # round 2: delete the round-1 insert again
+    store.append("mv", _zset([10], -1, x=np.array([10.0], np.float32)))
+    out = store.read("mv")
+    np.testing.assert_array_equal(out["rid"], [0, 1, 2, 3, 5])
+    # prefix read = pre-round content; suffix read = the raw weighted delta
+    np.testing.assert_array_equal(store.read_parts("mv", 0, 1)["x"], base["x"])
+    suffix = store.read_parts("mv", 1, 2)
+    assert "weight" in suffix and suffix["weight"].tolist() == [-1, -1, 1, 1]
+
+
+def test_diskstore_consolidate_rewrites_single_live_part(tmp_path):
+    store = DiskStore(tmp_path)
+    base = {"rid": np.arange(8, dtype=np.int64),
+            "x": np.ones(8, np.float32)}
+    store.write("mv", base)
+    store.append("mv", _zset([0, 1, 2], -1, x=np.ones(3, np.float32)))
+    before = store.read("mv")
+    bytes_with_tombstones = store.manifest()["mv"]
+    dt = store.consolidate("mv")
+    assert dt > 0.0
+    assert store.parts("mv") == 1
+    # manifest shrinks to live bytes; content is unchanged
+    assert store.manifest()["mv"] == table_nbytes(before)
+    assert store.manifest()["mv"] < bytes_with_tombstones
+    after = store.read("mv")
+    for k in before:
+        np.testing.assert_array_equal(after[k], before[k])
+    # idempotent no-op once single-part
+    assert store.consolidate("mv") == 0.0
+
+
+def test_diskstore_read_throttle_charges_tombstone_bytes(tmp_path):
+    """Throttle pricing is keyed on the logical bytes read — retraction
+    parts included — not on the (smaller) consolidated result: 2 MiB of
+    parts at 10 MB/s must take >= ~0.2s even though nearly every row is
+    retracted."""
+    store = DiskStore(tmp_path, read_bw=10e6)
+    n = 1 << 18
+    base = {"rid": np.arange(n, dtype=np.int64),
+            "x": np.zeros(n, np.float32)}   # ~3 MiB logical
+    store.write("mv", base)
+    kill = {"rid": base["rid"][:-16], "x": base["x"][:-16],
+            "weight": np.full(n - 16, -1, np.int64)}
+    store.append("mv", kill)
+    store.reset_counters()
+    out = store.read("mv")
+    assert len(out["rid"]) == 16  # nearly everything retracted
+    raw = table_nbytes(base) + table_nbytes(kill)
+    assert store.read_seconds >= 0.9 * raw / 10e6
+
+
+def test_diskstore_tombstone_crash_atomicity_and_stale_tmp_sweep(tmp_path):
+    """A consolidation that crashes before the manifest commit leaves the
+    tombstone parts authoritative; stale tmp files are ignored by readers
+    and swept by delete."""
+    store = DiskStore(tmp_path)
+    store.write("mv", {"rid": np.arange(4, dtype=np.int64),
+                       "x": np.arange(4, dtype=np.float32)})
+    store.append("mv", _zset([0], -1, x=np.array([0.0], np.float32)))
+    expect = store.read("mv")
+    # simulated crash: the consolidated part lands on an unreferenced id and
+    # a stale .tmp survives, but the process dies before _record
+    new_id = max(store._part_ids("mv")) + 1
+    store._write_part("mv", new_id, expect)
+    (tmp_path / "mv.part99.npz.tmp").write_bytes(b"partial")
+    fresh = DiskStore(tmp_path)  # reader after restart
+    got = fresh.read("mv")
+    for k in expect:
+        np.testing.assert_array_equal(got[k], expect[k])
+    assert fresh.parts("mv") == 2  # manifest still references base + delta
+    # a later real consolidation overwrites the orphan and commits cleanly
+    fresh.consolidate("mv")
+    assert fresh.parts("mv") == 1
+    fresh.delete("mv")
+    assert list(tmp_path.glob("mv.*")) == []
+
+
 def test_diskstore_delete_removes_parts_and_tmp(tmp_path):
     store = DiskStore(tmp_path)
     t = {"x": np.arange(8)}

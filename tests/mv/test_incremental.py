@@ -2,12 +2,17 @@
 
 * incremental refresh of a realized workload is bitwise identical to a full
   recompute after every multi-round scenario (the acceptance property),
-  across seeds, worker counts, runtime join fallbacks, and static subtrees;
+  across seeds, worker counts, update kinds (insert / update / delete /
+  mixed), runtime join partial fallbacks, and static subtrees;
 * every round of a multi-round incremental plan stays within the catalog
-  budget at every worker count;
+  budget at every worker count, and the round's plan is valid and feasible
+  for the view graph it was solved against (the high-k property sweep —
+  static-subtree skips change the window residency profile);
 * the update-aware cost model: incremental views shrink short-circuitable
   bytes, statuses propagate per the delta rules, and simulated incremental
-  rounds refresh faster than full rounds while S/C stays > 1x.
+  rounds refresh faster than full rounds while S/C stays > 1x;
+* the simulator's fed-forward per-round sizes track the real executor's
+  manifest-observed sizes (sim-vs-real parity).
 """
 import numpy as np
 import pytest
@@ -15,7 +20,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import CostModel
-from repro.core.speedup import APPENDED, REPLACED, STATIC
+from repro.core.speedup import APPENDED, DELTA, REPLACED, STATIC
 from repro.mv import (
     DiskStore,
     UpdateSpec,
@@ -98,13 +103,34 @@ def test_incremental_bitwise_property(seed):
         shutil.rmtree(tmp_path, ignore_errors=True)
 
 
-def test_join_new_key_fallback_still_bitwise(tmp_path):
-    """A huge key space makes right-side deltas introduce new join keys, so
-    the JOIN delta rule cannot apply: the engine must detect it at runtime,
-    fall back to full recomputation, and stay bitwise identical."""
+def test_join_new_keys_need_no_full_recompute(tmp_path):
+    """A huge key space makes right-side deltas introduce new join keys; the
+    Z-set partial fallback re-joins only *newly-matched old-left rows* — with
+    a sparse key space there are none, so refresh stays a pure delta (no
+    fallback work at all) and the result is still bitwise identical."""
     wl = build(tmp_path, seed=3, key_mod=1 << 30)
     assert any(len(n.parents) >= 2 and n.op == "JOIN" for n in wl.nodes)
     reports, _, _ = run_both(tmp_path, wl, dict(ingest_frac=0.3, n_rounds=2))
+    inc = reports["incremental"]
+    assert sum(r.join_fallbacks for r in inc.rounds) == 0
+    assert not any(
+        s == REPLACED
+        for r in inc.rounds[1:]
+        for name, s in r.statuses.items()
+        if any(n.name == name and n.op == "JOIN" for n in wl.nodes)
+    )
+
+
+def test_join_partial_fallback_on_right_side_updates(tmp_path):
+    """Right-side UPDATEs rewrite first-occurrence match payloads, so the
+    engine must splice retract/insert corrections for the affected old-left
+    rows (the partial fallback) — and stay bitwise identical to the full
+    recompute."""
+    wl = build(tmp_path, seed=3)
+    assert any(len(n.parents) >= 2 and n.op == "JOIN" for n in wl.nodes)
+    reports, _, _ = run_both(
+        tmp_path, wl, dict(ingest_frac=0.1, update_frac=0.2, n_rounds=2)
+    )
     fallbacks = sum(r.join_fallbacks for r in reports["incremental"].rounds)
     assert fallbacks > 0
 
@@ -164,6 +190,122 @@ def test_multiround_budget_respected_at_every_k(tmp_path):
         for mode, rep in reports.items():
             for r in rep.rounds:
                 assert r.run.peak_catalog_bytes <= budget + 1e-9, (mode, k)
+
+
+# acceptance: mixed insert/update/delete rounds stay bitwise across
+# >= 3 seeds and k in {1, 2, 4} (run_both verifies incremental vs full
+# recompute on the real executor inside)
+@pytest.mark.parametrize("seed", [3, 11, 2026])
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_mixed_update_kinds_bitwise_across_seeds_and_k(tmp_path, seed, k):
+    wl = build(tmp_path, n_nodes=10, seed=seed, bytes_per_root=1 << 13)
+    reports, _, budget = run_both(
+        tmp_path, wl,
+        dict(ingest_frac=0.15, update_frac=0.15, delete_frac=0.1, n_rounds=2),
+        k=k,
+    )
+    inc = reports["incremental"]
+    # retraction-carrying deltas must actually flow (not collapse to full)
+    assert any(
+        s == DELTA for r in inc.rounds[1:] for s in r.statuses.values()
+    )
+    assert all(r.run.peak_catalog_bytes <= budget + 1e-9 for r in inc.rounds)
+
+
+@pytest.mark.parametrize("kind", ["update", "delete"])
+def test_pure_update_and_delete_scenarios_bitwise(tmp_path, kind):
+    """UPDATE-only and DELETE-only rounds (no ingest at all) refresh
+    incrementally and stay bitwise identical to full recompute."""
+    wl = build(tmp_path, n_nodes=12, seed=6, bytes_per_root=1 << 13)
+    kw = dict(ingest_frac=0.0, n_rounds=2)
+    kw["update_frac" if kind == "update" else "delete_frac"] = 0.25
+    reports, stores, _ = run_both(tmp_path, wl, kw)
+    inc = reports["incremental"]
+    assert any(
+        s in (DELTA, REPLACED) for r in inc.rounds[1:]
+        for s in r.statuses.values()
+    )
+    if kind == "delete":
+        # deletes must actually shrink some scan's stored content
+        scan = next(n.name for n in wl.nodes if not n.parents)
+        n0 = len(stores["incremental"].read_parts(scan, 0, 1)["key"])
+        n_now = len(stores["incremental"].read(scan)["key"])
+        assert n_now < n0
+
+
+HYP_KINDS = (
+    dict(ingest_frac=0.25),
+    dict(ingest_frac=0.0, update_frac=0.2),
+    dict(ingest_frac=0.0, delete_frac=0.2),
+    dict(ingest_frac=0.1, update_frac=0.1, delete_frac=0.1),
+)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(0, 3))
+def test_highk_round_budget_and_plan_validity_sweep(seed, k, kind):
+    """ROADMAP sweep: incremental rounds at high worker counts k — static
+    subtree skips change the window residency profile, so assert, for every
+    round, that the solved plan is valid (a topological permutation solved
+    for k) and feasible for the view graph it was planned against, and that
+    the executed round's true catalog peak stays within budget."""
+    import shutil
+    import tempfile
+    from pathlib import Path
+
+    from repro.mv import run_scenario as _run
+
+    tmp_path = Path(tempfile.mkdtemp(prefix=f"sweep{seed}_"))
+    try:
+        wl = build(tmp_path, n_nodes=10, seed=seed, bytes_per_root=1 << 13)
+        roots = [i for i, n in enumerate(wl.nodes) if not n.parents]
+        # partial ingest set: leaves static subtrees when the DAG has them
+        ingest = tuple(roots[: max(1, len(roots) - 1)])
+        spec = UpdateSpec(mode="incremental", n_rounds=2, ingest=ingest,
+                          **HYP_KINDS[kind])
+        budget = sum(n.size for n in wl.nodes) * 0.3
+        rep = _run(wl, DiskStore(tmp_path / "s"), budget, spec, CM,
+                   n_compute_workers=k)
+        for r in rep.rounds:
+            assert sorted(r.plan.order) == list(range(wl.n))
+            assert r.plan.n_workers == k  # solved for the executing k
+            view = (
+                wl if r.round_idx == 0
+                else incremental_view(wl, spec, 1, sizes=r.sizes)
+            )
+            g = view.to_graph(CM)
+            assert g.is_topological(r.plan.order)
+            assert g.is_feasible(r.plan.flagged, r.plan.order, budget, k)
+            assert r.run.peak_catalog_bytes <= budget + 1e-9
+            if r.round_idx:
+                static = {
+                    wl.nodes[i].name
+                    for i, s in enumerate(view.meta["update"]["statuses"])
+                    if s == STATIC
+                }
+                assert static <= set(r.run.skipped)
+    finally:
+        shutil.rmtree(tmp_path, ignore_errors=True)
+
+
+def test_sim_vs_real_per_round_size_parity(tmp_path):
+    """The simulator feeds each round's planner the previous round's modeled
+    full sizes, as the real engine feeds manifest-observed sizes: per round,
+    the two size vectors must agree in aggregate (the analytic linear-growth
+    model vs real delta bytes, tombstones included)."""
+    wl = build(tmp_path, n_nodes=12, seed=9, bytes_per_root=1 << 14)
+    spec = UpdateSpec(mode="incremental", ingest_frac=0.2, update_frac=0.1,
+                      delete_frac=0.05, n_rounds=3)
+    budget = sum(n.size for n in wl.nodes) * 0.4
+    real = run_scenario(wl, DiskStore(tmp_path / "real"), budget, spec, CM)
+    sim = simulate_scenario(wl, spec, CM, budget)
+    assert len(real.rounds) == len(sim.rounds)
+    for rr, sr in zip(real.rounds, sim.rounds):
+        assert len(rr.sizes) == len(sr.sizes) == wl.n
+        ratio = sum(sr.sizes) / sum(rr.sizes)
+        assert 0.5 < ratio < 2.0, (rr.round_idx, ratio)
+    # the feedback is genuinely per-round: sim sizes must evolve
+    assert sim.rounds[1].sizes != sim.rounds[-1].sizes
 
 
 def test_scenario_catalog_hits_and_appends(tmp_path):

@@ -1,8 +1,9 @@
-"""Delta-propagation algebra of the table operators (DESIGN.md §5).
+"""Delta-propagation algebra of the table operators (DESIGN.md §5-6).
 
 Property tests that every operator's incremental refresh rule is *bitwise*
-identical to a full recompute over the concatenated input — the invariant
-the incremental engine's correctness induction rests on:
+identical to a full recompute over the updated input — the invariant the
+incremental engine's correctness induction rests on. The insert-only rules
+of the append model:
 
 * FILTER / PROJECT / MAP:  op(old ++ Δ) == op(old) ++ op(Δ)
 * JOIN (left delta):       join(L ++ ΔL, R) == join(L, R) ++ join(ΔL, R)
@@ -10,6 +11,18 @@ the incremental engine's correctness induction rests on:
 * UNION (rid-ordered):     union(L ++ ΔL, R ++ ΔR)
                            == union(L, R) ++ union(ΔL, ΔR)
 * AGG (mergeable partials): agg(old ++ Δ) == merge_agg(agg(old), agg(Δ))
+
+and the Z-set weighted-row generalization (UPDATE/DELETE):
+
+* apply_delta:  retractions drop by rid, insertions splice back in the
+                canonical stable rid order == full recompute row order
+* row-wise ops over random operator chains:
+                op(apply_delta(old, Δ±)) == apply_delta(op(old), op(Δ±))
+* AGG:          merge_agg(agg(old), agg(Δ±)) == agg(apply_delta(old, Δ±)),
+                including values at the AGG_QUANTUM fixed-point boundary
+* JOIN:         apply_delta(join(L, R), zset_join_delta(L, ΔL, R, ΔR))
+                == join(apply_delta(L, ΔL), apply_delta(R, ΔR)), with the
+                partial fallback splicing newly-matched old-left rows
 """
 import numpy as np
 from hypothesis import given, settings
@@ -145,6 +158,256 @@ def test_project_preserves_meta_columns_even_at_minimum_width():
     for _ in range(4):
         t = T.op_project(t, keep_frac=0.5)
         assert "key" in t and "rid" in t
+
+
+# ---------------------------------------------------------------------------
+# Z-set weighted-row deltas (UPDATE / DELETE)
+# ---------------------------------------------------------------------------
+
+def zset_delta(old, seed, n_ins=20, n_upd=15, n_del=10, key_mod=16,
+               ins_round=1, node=0):
+    """Random Z-set delta over ``old``: retract+reinsert pairs for updates
+    (same rid, fresh key/values), bare retractions for deletes, and fresh
+    rows for inserts — the shape ``realize_workload`` scan deltas take."""
+    rng = np.random.default_rng(seed)
+    n_old = len(old["key"])
+    n_del = min(n_del, n_old)
+    n_upd = min(n_upd, n_old - n_del)
+    perm = rng.permutation(n_old)
+    del_idx = np.sort(perm[:n_del])
+    upd_idx = np.sort(perm[n_del:n_del + n_upd])
+    parts = []
+    retract = np.sort(np.concatenate([del_idx, upd_idx]))
+    if retract.size:
+        parts.append(T.with_weight(T.take_rows(old, retract), -1))
+    if upd_idx.size:
+        upd = {}
+        for col in old:
+            if col == "key":
+                upd[col] = rng.integers(0, key_mod, n_upd).astype(np.int64)
+            elif col == "rid":
+                upd[col] = np.asarray(old["rid"])[upd_idx]
+            else:
+                upd[col] = rng.standard_normal(n_upd).astype(np.float32)
+        parts.append(T.with_weight(upd, +1))
+    if n_ins:
+        parts.append(T.with_weight(T.make_base_table(
+            n_ins, len(old) - 1, seed=seed + 1, key_mod=key_mod,
+            rid_base=T.make_rid_base(ins_round, node))))
+    if not parts:
+        return T.with_weight(T.empty_like(T.table_schema(old)))
+    return {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_apply_delta_update_keeps_position_delete_removes(seed):
+    old = T.make_base_table(100, 4, seed=seed, key_mod=12,
+                            rid_base=T.make_rid_base(0, 0))
+    delta = zset_delta(old, seed + 5, n_ins=10, n_upd=8, n_del=6)
+    new = T.apply_delta(old, delta)
+    w = T.weights_of(delta)
+    retracted = set(np.asarray(delta["rid"])[w < 0].tolist())
+    inserted = np.asarray(delta["rid"])[w > 0]
+    expect_rids = np.sort(np.concatenate([
+        np.array([r for r in old["rid"] if r not in retracted], np.int64),
+        inserted,
+    ]))
+    np.testing.assert_array_equal(new["rid"], expect_rids)
+    assert "weight" not in new
+    # canonical order is stable-ascending in rid
+    assert (np.diff(new["rid"]) >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 2), st.integers(0, 2),
+       st.integers(0, 2))
+def test_zset_rowwise_chains_commute(seed, o1, o2, o3):
+    """Random FILTER/MAP/PROJECT chains over random insert/update/delete
+    deltas: consolidating the chained delta equals recomputing the chain
+    over the consolidated input, bitwise."""
+    ops = [
+        lambda t: T.op_filter(t, threshold=-0.2),
+        T.op_map,
+        lambda t: T.op_project(t, keep_frac=0.7),
+    ]
+    chain = [ops[o1], ops[o2], ops[o3]]
+
+    def run_chain(t):
+        for op in chain:
+            t = op(t)
+        return t
+
+    old = T.make_base_table(150, 4, seed=seed, key_mod=16,
+                            rid_base=T.make_rid_base(0, 0))
+    delta = zset_delta(old, seed + 3)
+    full = run_chain(T.apply_delta(old, delta))
+    inc = T.apply_delta(run_chain(old), run_chain(delta))
+    assert_bitwise(full, inc)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_agg_retraction_merges_exactly(seed):
+    """Signed partial aggregates: merging the weighted delta aggregate into
+    the old output equals aggregating the consolidated table, bitwise —
+    groups retracted to zero rows drop out."""
+    old = T.make_base_table(120, 4, seed=seed, key_mod=8,
+                            rid_base=T.make_rid_base(0, 0))
+    # delete whole key groups sometimes: key_mod 8 over 120 rows makes some
+    # groups small enough to vanish entirely
+    delta = zset_delta(old, seed + 9, n_ins=15, n_upd=20, n_del=30, key_mod=8)
+    full = T.op_agg(T.apply_delta(old, delta))
+    inc = T.merge_agg(T.op_agg(old), T.op_agg(delta))
+    assert_bitwise(full, inc)
+
+
+def test_agg_retraction_drops_emptied_groups():
+    old = {
+        "key": np.array([1, 1, 2], np.int64),
+        "rid": np.arange(3, dtype=np.int64),
+        "c0": np.array([0.5, 0.25, 1.0], np.float32),
+    }
+    # retract every key-2 row
+    delta = T.with_weight(T.take_rows(old, np.array([2])), -1)
+    merged = T.merge_agg(T.op_agg(old), T.op_agg(delta))
+    assert merged["key"].tolist() == [1]
+    assert_bitwise(merged, T.op_agg(T.apply_delta(old, delta)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_agg_retraction_exact_at_fixed_point_boundary(seed):
+    """Values at the AGG_QUANTUM rounding boundary (x.5 ulp in fixed point,
+    where rint rounds half-even): retraction must subtract the exact
+    quantized integer the insertion added, so the merge stays bitwise."""
+    rng = np.random.default_rng(seed)
+    n = 64
+    halves = (rng.integers(-(1 << 12), 1 << 12, n).astype(np.float64)
+              + 0.5) / T.AGG_QUANTUM
+    old = {
+        "key": rng.integers(0, 6, n).astype(np.int64),
+        "rid": np.arange(n, dtype=np.int64),
+        "c0": halves.astype(np.float32),
+    }
+    delta = zset_delta(old, seed + 1, n_ins=8, n_upd=10, n_del=10, key_mod=6)
+    full = T.op_agg(T.apply_delta(old, delta))
+    inc = T.merge_agg(T.op_agg(old), T.op_agg(delta))
+    assert_bitwise(full, inc)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([8, 64, 1 << 30]))
+def test_zset_join_delta_matches_full_recompute(seed, key_mod):
+    """Weighted JOIN delta across saturated, moderate, and sparse key
+    spaces: left/right inserts, updates, and deletes — including right-side
+    first-occurrence changes handled by the partial fallback — consolidate
+    to exactly the recomputed join."""
+    left = T.make_base_table(120, 4, seed=seed, key_mod=key_mod,
+                             rid_base=T.make_rid_base(0, 0))
+    right = T.make_base_table(80, 4, seed=seed + 7, key_mod=key_mod,
+                              rid_base=T.make_rid_base(0, 1))
+    dl = zset_delta(left, seed + 3, n_ins=25, n_upd=12, n_del=8,
+                    key_mod=key_mod, node=0)
+    dr = zset_delta(right, seed + 4, n_ins=15, n_upd=10, n_del=6,
+                    key_mod=key_mod, node=1)
+    left_new, right_new = T.apply_delta(left, dl), T.apply_delta(right, dr)
+    dout, _ = T.zset_join_delta(left, dl, right, dr)
+    full = T.op_join(left_new, right_new)
+    inc = T.apply_delta(T.op_join(left, right), dout)
+    assert_bitwise(full, inc)
+
+
+def test_zset_join_partial_fallback_splices_newly_matched_rows():
+    """A right-side insert with a previously-unmatched key must re-join the
+    old left rows carrying that key and splice them at their (old) rids —
+    mid-stream, not appended."""
+    left = {
+        "key": np.array([5, 9, 5], np.int64),
+        "rid": np.array([10, 11, 12], np.int64),
+        "c0": np.array([1.0, 2.0, 3.0], np.float32),
+    }
+    right = {
+        "key": np.array([9], np.int64),
+        "rid": np.array([100], np.int64),
+        "c0": np.array([7.0], np.float32),
+    }
+    old_out = T.op_join(left, right)
+    assert old_out["rid"].tolist() == [11]
+    dr = T.with_weight({
+        "key": np.array([5], np.int64),
+        "rid": np.array([200], np.int64),
+        "c0": np.array([8.0], np.float32),
+    })
+    empty = T.with_weight(T.empty_like(T.table_schema(left)))
+    dout, corrected = T.zset_join_delta(left, empty, right, dr)
+    assert corrected == 2  # both key-5 left rows newly matched
+    new_out = T.apply_delta(old_out, dout)
+    assert new_out["rid"].tolist() == [10, 11, 12]  # spliced by rid
+    assert_bitwise(new_out, T.op_join(left, T.apply_delta(right, dr)))
+
+
+def test_zset_join_right_delete_retracts_matches():
+    """Deleting a right row unmatches the old-left rows that joined it."""
+    left = {
+        "key": np.array([5, 9], np.int64),
+        "rid": np.array([10, 11], np.int64),
+        "c0": np.array([1.0, 2.0], np.float32),
+    }
+    right = {
+        "key": np.array([5, 9], np.int64),
+        "rid": np.array([100, 101], np.int64),
+        "c0": np.array([7.0, 8.0], np.float32),
+    }
+    dr = T.with_weight(T.take_rows(right, np.array([0])), -1)
+    empty = T.with_weight(T.empty_like(T.table_schema(left)))
+    dout, corrected = T.zset_join_delta(left, empty, right, dr)
+    assert corrected == 1
+    new_out = T.apply_delta(T.op_join(left, right), dout)
+    assert new_out["rid"].tolist() == [11]
+    assert_bitwise(new_out, T.op_join(left, T.apply_delta(right, dr)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_zset_union_consolidates_and_matches_full(seed):
+    """UNION of weighted deltas: the rid-consolidated concatenation applied
+    to the old union equals the union of the consolidated inputs."""
+    l0 = T.make_base_table(80, 4, seed=seed, key_mod=16,
+                           rid_base=T.make_rid_base(0, 0))
+    r0 = T.make_base_table(60, 4, seed=seed + 1, key_mod=16,
+                           rid_base=T.make_rid_base(0, 1))
+    dl = zset_delta(l0, seed + 2, n_ins=10, n_upd=8, n_del=5, node=0)
+    dr = zset_delta(r0, seed + 3, n_ins=8, n_upd=6, n_del=4, node=1)
+    full = T.op_union(T.apply_delta(l0, dl), T.apply_delta(r0, dr))
+    inc = T.apply_delta(T.op_union(l0, r0), T.op_union(dl, dr))
+    assert_bitwise(full, inc)
+
+
+def test_consolidate_zset_cancels_exact_noop_pairs():
+    t = {
+        "key": np.array([1, 1, 2, 3], np.int64),
+        "rid": np.array([10, 10, 11, 12], np.int64),
+        "c0": np.array([1.5, 1.5, 2.0, 3.0], np.float32),
+        "weight": np.array([-1, 1, -1, 1], np.int64),
+    }
+    out = T.consolidate_zset(t)
+    # rid 10 is an exact retract/insert pair -> cancelled; 11/12 differ in rid
+    assert out["rid"].tolist() == [11, 12]
+    # a pair differing only in payload bits must NOT cancel
+    t2 = dict(t)
+    t2["c0"] = np.array([1.5, -1.5, 2.0, 3.0], np.float32)
+    assert T.consolidate_zset(t2)["rid"].tolist() == [10, 10, 11, 12]
+
+
+def test_weighted_project_keeps_full_table_width():
+    """A weighted delta must project to exactly the columns the full-table
+    projection keeps (plus weight) — the weight column cannot perturb the
+    projection width arithmetic."""
+    t = T.make_base_table(32, 5, seed=1, rid_base=T.make_rid_base(0, 0))
+    full_cols = set(T.op_project(t, keep_frac=0.6))
+    delta_cols = set(T.op_project(T.with_weight(t), keep_frac=0.6))
+    assert delta_cols == full_cols | {"weight"}
 
 
 def test_map_is_batch_shape_invariant():
