@@ -1,0 +1,137 @@
+"""Partition-granular S/C: fixed-budget P × k sweep on a skewed workload.
+
+The whole-MV planner keeps *entire* MVs in bounded memory, so an MV larger
+than the Memory Catalog contributes nothing — it is excluded outright. This
+sweep builds a skewed workload whose hottest MV alone exceeds the budget
+(the paper's objective applied at sub-MV granularity, DESIGN.md §7),
+hash-partitions every MV P ways with a Zipf-skewed share vector (hot keys
+hash to the same partitions at every operator), and re-solves S/C Opt over
+the expanded graph: the MKP now pins *which partitions of which MV* fit.
+
+Reported per (P, k): end-to-end build time and speedup against the common
+unpartitioned serial baseline, plus incremental refresh-round speedups via
+``simulate_scenario`` on the expanded workload. Acceptance (asserted): with
+the budget smaller than the largest MV, partition-granular S/C at P >= 8
+achieves strictly higher end-to-end speedup than whole-MV S/C (P = 1) at
+every worker count.
+"""
+from __future__ import annotations
+
+from repro.core import serial_plan, solve
+from repro.core.speedup import EFFECTIVE_NFS_COST_MODEL, partition_shares
+from repro.mv import UpdateSpec, generate_workload, partition_workload, simulate_scenario
+from repro.mv.engine import simulate_events
+
+from .common import fmt_table, save_json
+
+SKEW = 1.1          # Zipf exponent of the per-partition byte shares
+SHARE_SEED = 7      # deterministic shuffle of the hot partitions
+HOT_FACTOR = 2.5    # hottest MV = HOT_FACTOR x the catalog budget
+
+
+def skewed_workload(seed: int = 31, n_nodes: int = 20):
+    """A §VI-H workload with one dominant hot MV: the intermediate with the
+    most children is inflated until it dwarfs the rest — the flag the
+    whole-MV planner wants most and cannot afford."""
+    wl = generate_workload(n_nodes, seed=seed)
+    children = [0] * wl.n
+    for a, _ in wl.edges():
+        children[a] += 1
+    hot = max(
+        (v for v in range(wl.n) if children[v] > 0),
+        key=lambda v: children[v] * wl.nodes[v].size,
+    )
+    top = max(n.size for n in wl.nodes)
+    wl.nodes[hot].size = max(wl.nodes[hot].size, 2.0 * top)
+    budget = wl.nodes[hot].size / HOT_FACTOR
+    assert budget < max(n.size for n in wl.nodes)
+    return wl, hot, budget
+
+
+def run(quick: bool = False):
+    cm = EFFECTIVE_NFS_COST_MODEL
+    wl, hot, budget = skewed_workload()
+    hot_name = wl.nodes[hot].name
+    ps = (1, 8) if quick else (1, 2, 4, 8)
+    ks = (1, 4)
+    spec = UpdateSpec(mode="incremental", ingest_frac=0.05,
+                      n_rounds=1 if quick else 2)
+    out = {
+        "budget_bytes": budget,
+        "hot_mv": hot_name,
+        "hot_mv_bytes": wl.nodes[hot].size,
+        "skew": SKEW,
+        "sweep": {},
+    }
+    rows = []
+    for k in ks:
+        serial_ref = simulate_events(
+            wl, serial_plan(wl.to_graph(cm)), cm, mode="serial", n_workers=k
+        ).end_to_end
+        for P in ps:
+            shares = partition_shares(P, skew=SKEW, seed=SHARE_SEED)
+            pwl, pmap = partition_workload(wl, P, shares=shares)
+            g = pwl.to_graph(cm)
+            plan = solve(g, budget=budget, n_workers=k)
+            sim = simulate_events(pwl, plan, cm, mode="sc", n_workers=k)
+            # fraction of the hot MV's partitions the plan pinned
+            hot_flagged = sum(
+                1 for i in plan.flagged if pmap.base_of(i)[0] == hot
+            )
+            # incremental refresh rounds at the same partition granularity
+            ref_serial = simulate_scenario(
+                pwl, spec, cm, budget, method="serial", n_workers=k
+            ).refresh_seconds
+            ref_sc = simulate_scenario(
+                pwl, spec, cm, budget, method="sc", n_workers=k
+            ).refresh_seconds
+            r = {
+                "build_serial_s": serial_ref,
+                "build_sc_s": sim.end_to_end,
+                "build_speedup": serial_ref / sim.end_to_end,
+                "hot_partitions_flagged": hot_flagged,
+                "hot_residency_frac": hot_flagged / P,
+                "refresh_serial_s": ref_serial,
+                "refresh_sc_s": ref_sc,
+                "refresh_speedup": ref_serial / ref_sc,
+            }
+            out["sweep"][f"P{P}_k{k}"] = r
+            rows.append([
+                f"{P}", f"{k}", f"{serial_ref:.0f}", f"{sim.end_to_end:.0f}",
+                f"{r['build_speedup']:.2f}x",
+                f"{hot_flagged}/{P}",
+                f"{r['refresh_speedup']:.2f}x",
+            ])
+    print(f"\n== Partition sweep: skewed workload, hot MV "
+          f"{out['hot_mv_bytes'] / 1e9:.1f}GB > budget "
+          f"{budget / 1e9:.1f}GB (Zipf {SKEW} shares) ==")
+    print(fmt_table(
+        ["P", "k", "serial(s)", "S/C(s)", "build spd", "hot flags",
+         "refresh spd"],
+        rows,
+    ))
+    # acceptance: partition granularity must strictly beat whole-MV S/C
+    for k in ks:
+        whole = out["sweep"][f"P1_k{k}"]
+        part = out["sweep"][f"P8_k{k}"]
+        assert whole["hot_partitions_flagged"] == 0, (
+            "whole-MV planner flagged an MV larger than the budget"
+        )
+        assert part["hot_partitions_flagged"] > 0, (
+            f"k={k}: partition planner pinned no hot partitions"
+        )
+        assert part["build_speedup"] > whole["build_speedup"], (
+            f"k={k}: P=8 build speedup {part['build_speedup']:.3f}x "
+            f"not above whole-MV {whole['build_speedup']:.3f}x"
+        )
+        assert part["refresh_speedup"] >= whole["refresh_speedup"], (
+            f"k={k}: P=8 refresh speedup regressed"
+        )
+    best = max(r["build_speedup"] for r in out["sweep"].values())
+    print(f"best partitioned build speedup: {best:.2f}x")
+    save_json("partition_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -20,6 +20,7 @@ from . import (
     fig14_sweep,
     incremental,
     parallel_sweep,
+    partition_sweep,
     real_executor,
     roofline,
     table4_readtime,
@@ -33,6 +34,7 @@ MODULES = [
     ("fig12_ablation", fig12_ablation.run),
     ("table5_cluster", table5_cluster.run),
     ("parallel_sweep", parallel_sweep.run),
+    ("partition_sweep", partition_sweep.run),
     ("incremental", incremental.run),
     ("fig13_opttime", fig13_opttime.run),
     ("fig14_sweep", fig14_sweep.run),
@@ -45,8 +47,11 @@ MODULES = [
 # workload must show incremental < full and S/C > 1x; for update/delete
 # churn, at least one workload must show S/C > 1x — plus bitwise identity of
 # incremental vs full recompute on the real executor for insert-only and
-# mixed churn (see benchmarks/incremental.py for the exact assertions)
-SMOKE_MODULES = ["incremental"]
+# mixed churn (see benchmarks/incremental.py for the exact assertions).
+# partition_sweep additionally asserts the partition-granular acceptance
+# claim: with the budget below the hottest MV, P>=8 S/C strictly beats
+# whole-MV S/C on the skewed workload (JSON artifact uploaded by CI).
+SMOKE_MODULES = ["incremental", "partition_sweep"]
 
 
 def main(argv=None):

@@ -1,5 +1,5 @@
 """S/C core: the paper's contribution (S/C Opt joint optimization)."""
-from .altopt import Plan, serial_plan, solve
+from .altopt import Plan, PartitionedPlan, serial_plan, solve, solve_partitioned
 from .graph import MVGraph, from_parent_lists, positions
 from .madfs import ORDER_SOLVERS, ma_dfs, random_dfs, separator, simulated_annealing
 from .mkp import (
@@ -12,10 +12,21 @@ from .mkp import (
     ratio_select,
     simplified_mkp,
 )
-from .speedup import PAPER_COST_MODEL, CostModel, rescore, score_graph
+from .speedup import (
+    PAPER_COST_MODEL,
+    CostModel,
+    partition_shares,
+    rescore,
+    score_graph,
+    score_partitioned_graph,
+)
 
 __all__ = [
     "Plan",
+    "PartitionedPlan",
+    "solve_partitioned",
+    "partition_shares",
+    "score_partitioned_graph",
     "MVGraph",
     "CostModel",
     "PAPER_COST_MODEL",

@@ -122,6 +122,70 @@ def solve(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class PartitionedPlan:
+    """A partition-granular refresh plan (DESIGN.md §7).
+
+    ``plan`` is an ordinary ``Plan`` over the P-way expanded graph — the
+    engine executes it directly, dispatching ``(mv, partition)`` tasks.
+    ``index`` maps every expanded node back to its ``(node, partition)``
+    pair, so ``flagged_partitions`` reads off *which partitions of which MV*
+    the objective chose to pin: fractional residency, with the whole-MV plan
+    as the ``n_partitions=1`` degenerate case.
+    """
+
+    plan: Plan
+    n_partitions: int
+    index: tuple[tuple[int, int], ...]
+
+    @property
+    def flagged_partitions(self) -> frozenset[tuple[int, int]]:
+        return frozenset(self.index[i] for i in self.plan.flagged)
+
+    def residency_fraction(self, v: int) -> float:
+        """Fraction of node ``v``'s partitions the plan keeps resident."""
+        flagged = sum(1 for n, _ in self.flagged_partitions if n == v)
+        return flagged / self.n_partitions
+
+
+def solve_partitioned(
+    graph: MVGraph,
+    budget: float,
+    n_partitions: int,
+    cost_model=None,
+    shares: Sequence[float] | None = None,
+    **solve_kw,
+) -> PartitionedPlan:
+    """Solve S/C Opt at partition granularity.
+
+    The whole-MV graph is expanded P ways (co-partitioned edges, sizes and
+    scores split by ``shares``, rescored per partition when ``cost_model``
+    is given) and Algorithm 2 runs unchanged over the expansion: the MKP now
+    chooses *which partitions of which MV* to pin within the byte budget —
+    an MV too large to flag whole contributes whichever partitions fit.
+    Feasibility inherits the k-worker window guarantee of ``solve``: the
+    returned plan fits the budget under every interleaving the engine can
+    produce with ``solve_kw['n_workers']`` workers. ``n_partitions=1``
+    degenerates to exactly ``solve(graph, budget, **solve_kw)``."""
+    P = max(int(n_partitions), 1)
+    if P == 1:
+        expanded, index = graph, tuple((v, 0) for v in range(graph.n))
+    else:
+        expanded, index = graph.expand_partitions(P, shares)
+    if cost_model is not None:
+        # rescore at every P — including the P=1 degenerate case — so a
+        # P-sweep compares plans under one objective, not whatever model
+        # originally scored ``graph``
+        from .speedup import rescore
+
+        expanded = rescore(expanded, cost_model)
+    return PartitionedPlan(
+        plan=solve(expanded, budget, **solve_kw),
+        n_partitions=P,
+        index=index,
+    )
+
+
 def serial_plan(graph: MVGraph) -> Plan:
     """The unoptimized baseline: topological order, nothing kept in memory."""
     tau = graph.topological_order()

@@ -190,6 +190,42 @@ class MVGraph:
                 active.discard(i)
         return out
 
+    # -- partition expansion (partition-granular residency, DESIGN.md §7) -----
+    def expand_partitions(
+        self,
+        n_partitions: int,
+        shares: Sequence[float] | None = None,
+    ) -> tuple["MVGraph", tuple[tuple[int, int], ...]]:
+        """The P-way co-partitioned expansion of this graph: node ``v``
+        becomes ``P`` nodes ``(v, p)`` at indices ``v*P + p`` with edges only
+        between equal partitions (hash partitioning by a key column routes
+        every operator's partition-``p`` output from its parents'
+        partition-``p`` outputs). ``shares`` are the per-partition byte
+        fractions (default uniform; a skewed key distribution makes them
+        uneven — the same vector applies to every node because hot keys hash
+        to the same partition at every operator). Scores are split like
+        sizes — callers wanting latency-exact per-partition scores rescore
+        via ``speedup.score_partitioned_graph``. ``P=1`` returns ``self``
+        unchanged: whole-MV planning is the degenerate case.
+
+        Returns ``(expanded graph, index)`` with ``index[i] = (node,
+        partition)`` for every expanded node ``i``.
+        """
+        P = max(int(n_partitions), 1)
+        if P == 1:
+            return self, tuple((v, 0) for v in range(self.n))
+        shares = normalize_shares(P, shares)
+        edges = tuple(
+            (a * P + p, b * P + p) for a, b in self.edges for p in range(P)
+        )
+        sizes = tuple(self.sizes[v] * s for v in range(self.n) for s in shares)
+        scores = tuple(self.scores[v] * s for v in range(self.n) for s in shares)
+        names = tuple(
+            f"{self.names[v]}@p{p}" for v in range(self.n) for p in range(P)
+        )
+        index = tuple((v, p) for v in range(self.n) for p in range(P))
+        return MVGraph(self.n * P, edges, sizes, scores, names), index
+
     # -- misc ------------------------------------------------------------------
     def subgraph(self, keep: Sequence[int]) -> "MVGraph":
         remap = {v: i for i, v in enumerate(keep)}
@@ -212,6 +248,24 @@ class MVGraph:
         g.add_nodes_from(range(self.n))
         g.add_edges_from(self.edges)
         return g
+
+
+def normalize_shares(
+    n_partitions: int, shares: Sequence[float] | None
+) -> list[float]:
+    """Validated, sum-1 per-partition byte shares (None → uniform). The one
+    policy both expansions — ``MVGraph.expand_partitions`` and
+    ``mv.partition.partition_workload`` — must agree on."""
+    P = max(int(n_partitions), 1)
+    if shares is None:
+        return [1.0 / P] * P
+    if len(shares) != P:
+        raise ValueError(f"need {P} shares, got {len(shares)}")
+    shares = [float(s) for s in shares]
+    if any(s < 0 for s in shares) or sum(shares) <= 0:
+        raise ValueError("shares must be non-negative with a positive sum")
+    total = sum(shares)
+    return [s / total for s in shares]
 
 
 def positions(order: Sequence[int]) -> list[int]:

@@ -99,6 +99,55 @@ def rescore(graph: MVGraph, cost_model: CostModel) -> MVGraph:
 
 
 # ---------------------------------------------------------------------------
+# Partition-granular scoring (fractional residency, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def partition_shares(
+    n_partitions: int, skew: float = 0.0, seed: int = 0
+) -> tuple[float, ...]:
+    """Modeled per-partition byte shares of a hash-partitioned table:
+    Zipf(``skew``) over partitions, deterministically shuffled by ``seed``
+    (``skew=0`` → uniform). A skewed key distribution concentrates bytes in
+    the partitions its hot keys hash to; the same share vector applies to
+    every node of a co-partitioned pipeline."""
+    import random
+
+    P = max(int(n_partitions), 1)
+    w = [1.0 / (i + 1) ** skew for i in range(P)]
+    rng = random.Random(seed)
+    rng.shuffle(w)
+    total = sum(w)
+    return tuple(x / total for x in w)
+
+
+def score_partitioned_graph(
+    n: int,
+    edges: Sequence[tuple[int, int]],
+    sizes: Sequence[float],
+    n_partitions: int,
+    cost_model: CostModel = PAPER_COST_MODEL,
+    names: Sequence[str] = (),
+    shares: Sequence[float] | None = None,
+) -> tuple[MVGraph, tuple[tuple[int, int], ...]]:
+    """Speedup-scored P-way co-partitioned MVGraph.
+
+    Each node ``v`` becomes ``P`` independently flaggable nodes ``(v, p)``
+    sized by ``shares`` (default uniform), each scored with the full cost
+    model — per-partition reads pay their own seek latency, so P-way
+    partitioning is *not* free in the objective. Flagging a subset of a
+    node's partitions buys that subset's read savings at that subset's byte
+    cost: the objective now prices fractional residency, with ``P=1``
+    reducing bit-for-bit to ``score_graph``. Returns the expanded graph and
+    the ``(node, partition)`` index of every expanded node."""
+    base = score_graph(n, edges, sizes, cost_model, names)
+    P = max(int(n_partitions), 1)
+    if P == 1:
+        return base, tuple((v, 0) for v in range(n))
+    expanded, index = base.expand_partitions(P, shares)
+    return rescore(expanded, cost_model), index
+
+
+# ---------------------------------------------------------------------------
 # Update-mode scoring (full vs incremental refresh rounds)
 # ---------------------------------------------------------------------------
 #
@@ -153,6 +202,7 @@ def propagate_update(
     mode: str = "incremental",
     update_frac: float = 0.0,
     delete_frac: float = 0.0,
+    join_fallback_rate: float = 1.0,
 ) -> UpdateRound:
     """Propagate a Z-set update round through the DAG (DESIGN.md §5-6).
 
@@ -171,6 +221,13 @@ def propagate_update(
     and any child of a replaced node recomputes fully. ``mode="full"``
     forces every non-scan node to REPLACED — the full-refresh baseline
     round.
+
+    ``join_fallback_rate`` calibrates the JOIN correction-cost term with the
+    *observed* partial-fallback rate (the fraction of affected right-side
+    keys that actually matched surviving old-left rows in previous rounds,
+    ``RoundReport.fallback_stats``); the default 1.0 is the uncalibrated
+    worst case — every affected key corrects. Statuses are rate-independent:
+    a round that *could* emit corrections stays DELTA even at rate 0.
     """
     n = len(ops)
     if round_idx < 1:
@@ -277,13 +334,14 @@ def propagate_update(
             # model cannot see.
             left, rights = ps[0], ps[1:]
             dleft = update[left] if statuses[left] in CHANGED else 0.0
-            corr = sum(
+            raw_corr = sum(
                 update[p] / max(full_at(p, round_idx), 1.0)
                 for p in rights
                 if statuses[p] == DELTA
             )
+            corr = max(min(join_fallback_rate, 1.0), 0.0) * raw_corr
             statuses[v] = DELTA if (
-                statuses[left] == DELTA or corr > 0.0
+                statuses[left] == DELTA or raw_corr > 0.0
             ) else APPENDED
             update[v] = sizes[v] * (
                 dleft / max(sizes[left], 1.0) + min(corr, 1.0)

@@ -72,6 +72,32 @@ class MemoryCatalog:
         with self._lock:
             return self._entries[name][0]
 
+    def entry_bytes(self, name: str) -> float:
+        """Accounted bytes of a resident entry (0.0 when absent)."""
+        with self._lock:
+            e = self._entries.get(name)
+            return e[1] if e is not None else 0.0
+
+    def resident(self) -> dict[str, float]:
+        """Snapshot of resident entry names -> accounted bytes."""
+        with self._lock:
+            return {k: s for k, (_, s) in self._entries.items()}
+
+    def used_bytes_for(self, name: str) -> float:
+        """Bytes resident for MV ``name``: its own entry plus any
+        partition-granular entries (``name@p0``, ``name@p1`` ... admitted
+        and released independently). Matches whole name components only —
+        ``mv1`` never counts ``mv10``'s partitions."""
+        from .storage import PARTITION_SEP
+
+        prefix = name + PARTITION_SEP
+        with self._lock:
+            return sum(
+                s
+                for k, (_, s) in self._entries.items()
+                if k == name or k.startswith(prefix)
+            )
+
     def __contains__(self, name: str) -> bool:
         with self._lock:
             return name in self._entries

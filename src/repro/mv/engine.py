@@ -24,6 +24,12 @@ window ``MVGraph.resident_sets(..., n_workers=k)`` charges — so plans from
 ``altopt.solve(..., n_workers=k)`` never exceed the byte budget under *any*
 interleaving the engine can produce. With ``k = 1`` the discipline reduces
 to the paper's serial statement stream. See DESIGN.md §1-2.
+
+Partitioned workloads (``mv.partition``) need nothing special here: the
+P-way expansion makes each (mv, partition) its own node with co-partitioned
+edges only, so partitions of one MV are mutually independent in the DAG and
+the same dispatch discipline runs a single wide MV data-parallel across the
+k workers (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -162,6 +168,7 @@ class RunReport:
     write_seconds: float
     node_seconds: dict[str, float]
     n_workers: int = 1
+    consolidations: int = 0  # tombstone consolidations charged to this run
 
 
 class _Counters:
@@ -272,6 +279,12 @@ class ThreadedEngine:
         self._publish(v, node.fn(inputs), rt)
         return time.perf_counter() - tn0
 
+    def _finalize_run(self) -> int:
+        """Post-drain maintenance charged into the run's elapsed time (the
+        incremental engine's tombstone consolidation pass); returns the
+        number of consolidations performed."""
+        return 0
+
     # -- coordinator ---------------------------------------------------------
     def run(
         self,
@@ -349,6 +362,9 @@ class ThreadedEngine:
             for f in list(rt.write_futures):
                 f.result()
             writer.shutdown(wait=True)
+        # post-drain maintenance (tombstone consolidation) is charged into
+        # this run's elapsed time — the round's plan pays its own debt
+        consolidations = self._finalize_run()
         elapsed = time.perf_counter() - t0
         return RunReport(
             elapsed=elapsed,
@@ -362,6 +378,7 @@ class ThreadedEngine:
             write_seconds=self.store.write_seconds,
             node_seconds=node_seconds,
             n_workers=self.n_compute_workers,
+            consolidations=consolidations,
         )
 
 

@@ -66,9 +66,10 @@ class IncrementalEngine(ThreadedEngine):
     """
 
     def __init__(self, workload: Workload, store: DiskStore, budget_bytes: float,
-                 spec: UpdateSpec, **kw):
+                 spec: UpdateSpec, consolidate_ratio: float | None = None, **kw):
         super().__init__(workload, store, budget_bytes, **kw)
         self.spec = spec
+        self.consolidate_ratio = consolidate_ratio
         self.round_idx = 0
         self.statuses: dict[int, str] = {}
         self.schemas: dict[str, dict[str, np.dtype]] = {}
@@ -76,6 +77,8 @@ class IncrementalEngine(ThreadedEngine):
         self._static: frozenset[int] = frozenset()
         self._fb_lock = threading.Lock()
         self.join_fallbacks = 0
+        self.fb_affected = 0  # right-delta keys whose PK mapping changed
+        self.fb_matched = 0   # ... that actually matched old-left rows
 
     def configure_round(self, round_idx: int, static: Sequence[int] = ()) -> None:
         self.round_idx = round_idx
@@ -85,6 +88,25 @@ class IncrementalEngine(ThreadedEngine):
             n.name: self.store.parts(n.name) for n in self.workload.nodes
         }
         self.join_fallbacks = 0
+        self.fb_affected = 0
+        self.fb_matched = 0
+
+    def _finalize_run(self) -> int:
+        """Tombstone consolidation scheduler (ROADMAP debt): after the round
+        is durable, rewrite any MV whose tombstone-debt estimate exceeds
+        ``consolidate_ratio`` × live bytes as its single live part. Runs
+        inside the round's timed window on the throttled store, so the
+        consolidation I/O is charged into that round's plan."""
+        if self.consolidate_ratio is None or self.round_idx == 0:
+            return 0
+        count = 0
+        for node in self.workload.nodes:
+            if self.store.parts(node.name) > 1 and (
+                self.store.tombstone_ratio(node.name) > self.consolidate_ratio
+            ):
+                self.store.consolidate(node.name)
+                count += 1
+        return count
 
     # -- hooks ---------------------------------------------------------------
     def _skip_node(self, v: int, resume: bool) -> bool:
@@ -167,12 +189,18 @@ class IncrementalEngine(ThreadedEngine):
         delta was: APPENDED when insert-only, DELTA when it retracts."""
         node = self.workload.nodes[v]
         self._remember_schema(node.name, T.strip_weight(delta))
-        if self._rows(delta) == 0:
+        if self._rows(delta) == 0 and self.store.exists(node.name):
             self.statuses[v] = STATIC  # empty delta: output is unchanged
             return
+        # (an empty *first* delta still writes: a partitioned scan can land
+        # zero rows in some partition at round 0, and that partition's MV
+        # must exist for later rounds to read its old content / schema)
         retracts = bool((T.weights_of(delta) < 0).any())
         self.statuses[v] = DELTA if retracts else APPENDED
-        size = table_nbytes(delta)
+        # a Z-set delta with |weight| > 1 rows expands to more live bytes
+        # than its physical encoding — charge the catalog the larger of the
+        # two (the weighted size model for duplicate-row sources)
+        size = max(table_nbytes(delta), T.weighted_nbytes(delta))
         if v in rt.flagged and rt.catalog.try_put(node.name, delta, size):
             fut = rt.writer.submit(self.store.append, node.name, delta)
             with rt.wf_lock:
@@ -266,11 +294,17 @@ class IncrementalEngine(ThreadedEngine):
         get_left = _memo(lambda: self._old_content(left_p))
         dl = T.with_weight(deltas[0])
         corrected = 0
+        affected = matched = 0
         rights = list(zip(node.parents[1:], deltas[1:]))
         for j, (p, dp) in enumerate(rights):
             right_old = self._old_content(p)
-            d_next, n_corr = T.zset_join_delta(get_left, dl, right_old, dp)
+            fb: dict = {}
+            d_next, n_corr = T.zset_join_delta(
+                get_left, dl, right_old, dp, stats=fb
+            )
             corrected += n_corr
+            affected += fb.get("affected_keys", 0)
+            matched += fb.get("matched_keys", 0)
             if j + 1 < len(rights):
                 # the next chained stage's old left is this stage's old output
                 prev_get, prev_right = get_left, right_old
@@ -278,9 +312,11 @@ class IncrementalEngine(ThreadedEngine):
                     lambda g=prev_get, r=prev_right: T.op_join(g(), r)
                 )
             dl = d_next
-        if corrected:
-            with self._fb_lock:
+        with self._fb_lock:
+            if corrected:
                 self.join_fallbacks += 1
+            self.fb_affected += affected
+            self.fb_matched += matched
         self._publish_delta(v, dl, rt)
 
 
@@ -300,10 +336,19 @@ class RoundReport:
     # later rounds: store-manifest observations) — the real-side quantity the
     # simulator's fed-forward sizes are compared against for parity
     sizes: tuple[float, ...] = ()
+    # observed JOIN partial-fallback profile of this round: ``affected``
+    # right-delta keys whose PK mapping changed, ``matched`` of those that
+    # actually hit old-left rows, and the ``rate_used`` the round's planner
+    # fed into the correction-cost term (calibrated from prior rounds)
+    fallback_stats: dict | None = None
 
     @property
     def elapsed(self) -> float:
         return self.run.elapsed
+
+    @property
+    def consolidations(self) -> int:
+        return self.run.consolidations
 
 
 @dataclasses.dataclass
@@ -334,6 +379,8 @@ def run_scenario(
     n_compute_workers: int = 1,
     n_writers: int = 1,
     optimize: bool = True,
+    static_fn=None,
+    consolidate_ratio: float | None = None,
 ) -> ScenarioReport:
     """Execute a multi-round refresh scenario on real data.
 
@@ -341,7 +388,15 @@ def run_scenario(
     under ``spec.mode``. The planner re-solves each round against the
     round's refresh view, sized from the store manifest (the paper's
     "metrics from previous runs"); ``optimize=False`` runs every round
-    serially with nothing flagged (the no-opt baseline)."""
+    serially with nothing flagged (the no-opt baseline).
+
+    ``static_fn(round_idx, view_static) -> extra static node ids`` adds
+    data-dependent skips on top of the analytic view's STATIC statuses —
+    the partition layer prunes clean partitions with it. The JOIN
+    correction-cost term is calibrated per round from the engine's observed
+    partial-fallback rates (``RoundReport.fallback_stats``), and
+    ``consolidate_ratio`` arms the tombstone consolidation scheduler
+    (``IncrementalEngine._finalize_run``)."""
     stale = {n.name for n in workload.nodes} & set(store.manifest())
     if stale:
         raise ValueError(
@@ -352,9 +407,12 @@ def run_scenario(
     engine = IncrementalEngine(
         workload, store, budget_bytes, spec,
         n_compute_workers=n_compute_workers, n_writers=n_writers,
+        consolidate_ratio=consolidate_ratio,
     )
     rounds: list[RoundReport] = []
+    fb_affected = fb_matched = 0  # cumulative observed fallback profile
     for r in range(spec.n_rounds + 1):
+        rate_used = 1.0
         if r == 0:
             view = workload
             sizes = [float(n.size) for n in workload.nodes]
@@ -366,8 +424,14 @@ def run_scenario(
             ]
             # manifest sizes already include all growth up to round r-1, so
             # the view is evaluated one round ahead of *current* sizes
-            # (round_idx=1) rather than compounding growth from round 0
-            view = incremental_view(workload, spec, 1, sizes=sizes)
+            # (round_idx=1) rather than compounding growth from round 0.
+            # The JOIN correction term uses the fallback rate observed over
+            # the rounds executed so far (1.0 until the first observation).
+            if fb_affected:
+                rate_used = fb_matched / fb_affected
+            view = incremental_view(
+                workload, spec, 1, sizes=sizes, fallback_rate=rate_used
+            )
         g = view.to_graph(cost_model)
         plan = (
             solve(g, budget=budget_bytes, n_workers=n_compute_workers)
@@ -375,9 +439,13 @@ def run_scenario(
             else serial_plan(g)
         )
         statuses = view.meta.get("update", {}).get("statuses", ())
-        static = [i for i, s in enumerate(statuses) if s == STATIC]
-        engine.configure_round(r, static)
+        static = frozenset(i for i, s in enumerate(statuses) if s == STATIC)
+        if static_fn is not None:
+            static = static | frozenset(static_fn(r, static))
+        engine.configure_round(r, sorted(static))
         rep = engine.run(plan)
+        fb_affected += engine.fb_affected
+        fb_matched += engine.fb_matched
         rounds.append(
             RoundReport(
                 round_idx=r,
@@ -390,6 +458,11 @@ def run_scenario(
                 },
                 join_fallbacks=engine.join_fallbacks,
                 sizes=tuple(sizes),
+                fallback_stats=dict(
+                    affected=engine.fb_affected,
+                    matched=engine.fb_matched,
+                    rate_used=rate_used,
+                ),
             )
         )
     return ScenarioReport(workload=workload.name, spec=spec, rounds=rounds)
@@ -402,20 +475,9 @@ def verify_scenario_equivalence(
     (incremental vs full recompute — the correctness claim of DESIGN.md §5).
     Raises AssertionError with the first divergent column."""
     for node in workload.nodes:
-        a, b = store_a.read(node.name), store_b.read(node.name)
-        if set(a) != set(b):
-            raise AssertionError(
-                f"{node.name}: column sets differ {sorted(a)} != {sorted(b)}"
-            )
-        for col in a:
-            va, vb = np.asarray(a[col]), np.asarray(b[col])
-            if va.dtype != vb.dtype or va.shape != vb.shape or not (
-                va.tobytes() == vb.tobytes()
-            ):
-                raise AssertionError(
-                    f"{node.name}.{col}: not bitwise identical "
-                    f"({va.dtype}{va.shape} vs {vb.dtype}{vb.shape})"
-                )
+        T.assert_tables_bitwise(
+            store_a.read(node.name), store_b.read(node.name), node.name
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -43,9 +43,51 @@ import numpy as np
 
 Table = Mapping[str, np.ndarray]
 
+# Separator between an MV name and its partition id in the store namespace:
+# partition ``p`` of MV ``mv3`` lives under the entry name ``mv3@p2``. Each
+# partition is an independent part-file group with its own manifest entry —
+# per-partition sizes, appends, and atomic commits fall out of the existing
+# single-entry machinery (DESIGN.md §7).
+PARTITION_SEP = "@p"
+
+
+def partition_entry_name(name: str, pid: int) -> str:
+    """Store-namespace name of partition ``pid`` of MV ``name``."""
+    return f"{name}{PARTITION_SEP}{int(pid)}"
+
+
+def split_partition_name(entry: str) -> tuple[str, int] | None:
+    """Inverse of ``partition_entry_name`` (None for unpartitioned names)."""
+    base, sep, pid = entry.rpartition(PARTITION_SEP)
+    if not sep or not pid.isdigit():
+        return None
+    return base, int(pid)
+
 
 def table_nbytes(table: Table) -> int:
     return int(sum(np.asarray(v).nbytes for v in table.values()))
+
+
+def _tombstone_bytes_of(delta: Table) -> int:
+    """Estimated dead bytes an appended Z-set delta part adds to an MV: the
+    physical bytes of its retraction rows plus the (equal-width) stored rows
+    those tombstones will cancel at the next consolidation. An estimate for
+    the consolidation scheduler, not an exact ledger — the victim rows'
+    payload width is taken from the delta's own schema minus the weight
+    column."""
+    from . import tableops as T
+
+    n = T.n_rows(delta)
+    if n == 0 or T.WEIGHT_COL not in delta:
+        return 0
+    w = np.asarray(delta[T.WEIGHT_COL], np.int64)
+    n_tomb = int((w < 0).sum())
+    if n_tomb == 0:
+        return 0
+    total = table_nbytes(delta)
+    payload = total - np.asarray(delta[T.WEIGHT_COL]).nbytes
+    retract_mult = int(-(w[w < 0].sum()))
+    return int(round(total / n * n_tomb + payload / n * retract_mult))
 
 
 class DiskStore:
@@ -125,19 +167,41 @@ class DiskStore:
         os.replace(tmp, self._manifest_path)
         self._entries_cache = entries
 
-    def _record(self, name: str, nbytes: int, part_id: int, append: bool) -> None:
+    def _record(
+        self, name: str, nbytes: int, part_id: int, append: bool, dead: int = 0
+    ) -> None:
         """Commit point of every mutation: the manifest atomically switches
-        the entry to reference the already-durable part file(s)."""
+        the entry to reference the already-durable part file(s). ``dead``
+        accumulates the tombstone-debt estimate of appended Z-set parts; a
+        full (replacing) write resets it — consolidated content carries no
+        retractions."""
         with self._manifest_lock:
             m = dict(self._entries_locked())
             if append and name in m:
                 m[name] = {
                     "bytes": int(m[name]["bytes"]) + nbytes,
                     "parts": [*m[name]["parts"], part_id],
+                    "dead": int(m[name].get("dead", 0)) + int(dead),
                 }
             else:
                 m[name] = {"bytes": nbytes, "parts": [part_id]}
             self._write_manifest(m)
+
+    # -- tombstone accounting (consolidation scheduling) -----------------------
+    def tombstone_bytes(self, name: str) -> int:
+        """Estimated dead bytes of ``name``: appended tombstone rows plus the
+        stored rows they retract (reset to 0 by any full rewrite)."""
+        return int(self._entries().get(name, {}).get("dead", 0))
+
+    def live_bytes(self, name: str) -> int:
+        """Estimated live content bytes of ``name`` (manifest bytes minus the
+        tombstone debt; what a consolidation would shrink the entry to)."""
+        e = self._entries().get(name, {})
+        return max(int(e.get("bytes", 0)) - int(e.get("dead", 0)), 0)
+
+    def tombstone_ratio(self, name: str) -> float:
+        """Dead-to-live ratio the consolidation policy thresholds on."""
+        return self.tombstone_bytes(name) / max(self.live_bytes(name), 1)
 
     # -- IO --------------------------------------------------------------------
     def _write_part(self, name: str, part: int, table: Table) -> float:
@@ -188,7 +252,10 @@ class DiskStore:
             return self.write(name, delta)
         new_id = max(old_ids) + 1
         dt = self._write_part(name, new_id, delta)
-        self._record(name, table_nbytes(delta), new_id, append=True)
+        self._record(
+            name, table_nbytes(delta), new_id, append=True,
+            dead=_tombstone_bytes_of(delta),
+        )
         return dt
 
     def consolidate(self, name: str) -> float:
@@ -251,6 +318,54 @@ class DiskStore:
         with self._io_lock:
             self.read_seconds += dt
         return out
+
+    # -- partitioned MVs -------------------------------------------------------
+    # A partitioned MV is a group of independent per-partition part-file
+    # entries (``name@p0`` .. ``name@p{P-1}``). Each partition mutates —
+    # write / append / consolidate — through the ordinary single-entry
+    # methods, so every partition commit is individually atomic at the
+    # manifest update and concurrent workers refreshing different partitions
+    # of one MV never contend on anything but the manifest lock.
+
+    def write_partition(self, name: str, pid: int, table: Table) -> float:
+        return self.write(partition_entry_name(name, pid), table)
+
+    def append_partition(self, name: str, pid: int, delta: Table) -> float:
+        return self.append(partition_entry_name(name, pid), delta)
+
+    def read_partition(self, name: str, pid: int) -> dict[str, np.ndarray]:
+        return self.read(partition_entry_name(name, pid))
+
+    def partition_ids(self, name: str) -> list[int]:
+        """Sorted partition ids materialized for MV ``name`` (empty when the
+        MV is stored unpartitioned or absent)."""
+        prefix = name + PARTITION_SEP
+        ids = []
+        for entry in self._entries():
+            if entry.startswith(prefix):
+                split = split_partition_name(entry)
+                if split is not None and split[0] == name:
+                    ids.append(split[1])
+        return sorted(ids)
+
+    def partition_manifest(self, name: str) -> dict[int, int]:
+        """Per-partition logical bytes of a partitioned MV."""
+        m = self.manifest()
+        return {
+            pid: m[partition_entry_name(name, pid)]
+            for pid in self.partition_ids(name)
+        }
+
+    def read_partitioned(self, name: str) -> dict[str, np.ndarray]:
+        """Assemble the live content of a partitioned MV in canonical order
+        (``partition.concat_partitions``: stable rid order, key order for
+        rid-less aggregates) — bitwise-identical to the unpartitioned MV."""
+        from .partition import concat_partitions
+
+        ids = self.partition_ids(name)
+        if not ids:
+            return self.read(name)  # unpartitioned fallback
+        return concat_partitions([self.read_partition(name, p) for p in ids])
 
     def delete(self, name: str) -> None:
         with self._manifest_lock:

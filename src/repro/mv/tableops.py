@@ -18,10 +18,12 @@ Base-table rows carry a ``rid`` column: a globally unique row id that is
 monotone in the ingestion round (all rows inserted at round ``r`` sort after
 every row from rounds ``< r``); updates keep their rid, so an updated row
 stays at its original position in the canonical rid order. A *delta* is a
-Z-set: a table with a ``weight`` meta column in {-1, +1} where ``+1`` rows
-are insertions and ``-1`` rows are *retractions* carrying the exact payload
-of the stored row they cancel (an UPDATE is a retraction plus an insertion
-under the same rid; a DELETE is a bare retraction). ``apply_delta``
+Z-set: a table with an integer ``weight`` meta column where positive rows
+are insertions (``+w`` = w identical copies, for duplicate-row sources) and
+negative rows are *retractions* carrying the exact payload of the stored
+row(s) they cancel (an UPDATE is a retraction plus an insertion under the
+same rid; a DELETE is a bare retraction; ``-w`` retracts w stored copies of
+the rid). ``apply_delta``
 consolidates a Z-set delta into the stored content: retracted rids are
 removed, insertions are spliced in, and the result is kept in the canonical
 stable rid order — which is exactly the row order a full recompute
@@ -62,7 +64,8 @@ Table = dict[str, np.ndarray]
 
 # Columns that are bookkeeping, not data: excluded from MAP inputs and AGG
 # measures (they still group/join/sort like any other column). ``weight`` is
-# the Z-set multiplicity of a delta row: +1 insertion, -1 retraction.
+# the Z-set multiplicity of a delta row: a positive weight inserts that many
+# identical copies, a negative weight retracts that many copies of its rid.
 WEIGHT_COL = "weight"
 META_COLS = ("key", "rid", WEIGHT_COL)
 
@@ -111,6 +114,26 @@ def n_rows(table: Table) -> int:
     return len(np.asarray(next(iter(table.values())))) if table else 0
 
 
+def weighted_nbytes(table: Table) -> int:
+    """Bytes of live content a table expands to when materialized.
+
+    Without a ``weight`` column this is the physical byte count. A Z-set
+    delta with general integer weights represents ``w`` identical copies of
+    each ``+w`` row (duplicate-row sources), so the content it expands to is
+    the per-row payload bytes times the total *positive* multiplicity — the
+    size model a Memory Catalog entry must be charged when the resident
+    delta can be larger than its physical encoding. Retraction rows carry
+    no live content."""
+    n = n_rows(table)
+    phys = int(sum(
+        np.asarray(v).nbytes for k, v in table.items() if k != WEIGHT_COL
+    ))
+    if WEIGHT_COL not in table or n == 0:
+        return phys
+    live_rows = int(np.clip(weights_of(table), 0, None).sum())
+    return int(round(phys * (live_rows / n)))
+
+
 def weights_of(table: Table) -> np.ndarray:
     """The Z-set weight vector of a delta (implicit all-+1 when absent)."""
     if WEIGHT_COL in table:
@@ -135,22 +158,47 @@ def take_rows(table: Table, idx: np.ndarray) -> Table:
     return {k: np.asarray(v)[idx] for k, v in table.items()}
 
 
+def _occurrence_index(values: np.ndarray) -> np.ndarray:
+    """occ[i] = number of j < i with values[j] == values[i] (duplicate rank)."""
+    order = np.argsort(values, kind="stable")
+    srt = values[order]
+    n = len(srt)
+    if n == 0:
+        return np.zeros(0, np.int64)
+    run_start = np.zeros(n, np.int64)
+    new_run = np.nonzero(np.r_[True, srt[1:] != srt[:-1]])[0]
+    run_start[new_run] = new_run
+    np.maximum.accumulate(run_start, out=run_start)
+    occ = np.empty(n, np.int64)
+    occ[order] = np.arange(n) - run_start
+    return occ
+
+
 def apply_delta(old: Table, delta: Table) -> Table:
     """Consolidate a Z-set delta into stored content.
 
-    Rows of ``old`` whose rid carries a retraction are removed, ``+1`` rows
-    are inserted, and the result is restored to the canonical stable rid
-    order — updates land back at their original position, join corrections
-    splice mid-stream, and pure appends (delta rids all larger) reduce to
-    the plain concatenation of the insert-only model. ``old`` carries no
-    weight column (it is stored content); the returned table doesn't
-    either. Retractions require a rid on both sides to match by.
+    Rows of ``old`` whose rid carries a retraction are removed, positive
+    rows are inserted, and the result is restored to the canonical stable
+    rid order — updates land back at their original position, join
+    corrections splice mid-stream, and pure appends (delta rids all larger)
+    reduce to the plain concatenation of the insert-only model. ``old``
+    carries no weight column (it is stored content); the returned table
+    doesn't either. Retractions require a rid on both sides to match by.
+
+    Weights are general integers (duplicate-row sources): a ``+w`` row
+    inserts ``w`` identical copies; a ``-w`` row retracts ``w`` copies of
+    its rid — stored copies under one rid are identical by construction, so
+    the first ``w`` occurrences (in rid order) are dropped, clamped to the
+    copies actually present.
     """
     if not delta or n_rows(delta) == 0:
         return dict(old)
     w = weights_of(delta)
     neg = w < 0
     pos_idx = np.nonzero(w > 0)[0]
+    if pos_idx.size and (w[pos_idx] != 1).any():
+        # general multiplicities: a +w row expands to w identical copies
+        pos_idx = np.repeat(pos_idx, w[pos_idx])
     missing = [k for k in old if k not in delta]
     if missing:
         raise ValueError(f"delta lacks columns {missing} of the target table")
@@ -174,7 +222,21 @@ def apply_delta(old: Table, delta: Table) -> Table:
             for k in old
         }
     if retracted.size:
-        keep = np.nonzero(~np.isin(old_rid, retracted))[0]
+        # per-rid retraction multiplicity (Σ -w over that rid's tombstones)
+        uniq_r, inv_r = np.unique(retracted, return_inverse=True)
+        counts = np.zeros(len(uniq_r), np.int64)
+        np.add.at(counts, inv_r, -w[neg])
+        pos_r = np.searchsorted(uniq_r, old_rid)
+        pos_r = np.clip(pos_r, 0, max(len(uniq_r) - 1, 0))
+        hit = uniq_r[pos_r] == old_rid if len(uniq_r) else np.zeros(
+            len(old_rid), bool
+        )
+        if (counts == 1).all() and len(np.unique(old_rid)) == len(old_rid):
+            keep = np.nonzero(~hit)[0]  # the unique-rid, weight-±1 hot path
+        else:
+            occ = _occurrence_index(old_rid)
+            drop = hit & (occ < counts[pos_r])
+            keep = np.nonzero(~drop)[0]
     else:
         keep = np.arange(len(old_rid))
     merged = {
@@ -207,10 +269,13 @@ def _row_bytes_equal(a: Table, ai: np.ndarray, b: Table, bi: np.ndarray,
 
 
 def consolidate_zset(delta: Table) -> Table:
-    """Cancel exact no-op pairs in a Z-set delta: a retraction and an
+    """Net opposite-sign pairs in a Z-set delta: a retraction and an
     insertion under the same (unique-per-sign) rid with bitwise-identical
-    payloads change nothing when applied, so both rows can be dropped.
-    Leaves everything else (order included) untouched."""
+    payloads partially cancel — their weights sum, the fully-cancelled pair
+    (net 0) drops out entirely, and a surviving net multiplicity stays on
+    the row whose sign it matches (general integer weights: ``-2`` vs
+    ``+3`` nets to a single ``+1`` insertion). Leaves everything else
+    (order included) untouched."""
     if WEIGHT_COL not in delta or "rid" not in delta or n_rows(delta) == 0:
         return delta
     w = weights_of(delta)
@@ -232,11 +297,24 @@ def consolidate_zset(delta: Table) -> Table:
         return delta
     cols = [k for k in delta if k not in (WEIGHT_COL, "rid")]
     same = _row_bytes_equal(delta, neg_u[ni], delta, pos_u[pi], cols)
-    drop = np.concatenate([neg_u[ni][same], pos_u[pi][same]])
-    if not drop.size:
+    if not same.any():
         return delta
-    keep = np.setdiff1d(np.arange(len(rid)), drop)
-    return take_rows(delta, keep)
+    neg_s, pos_s = neg_u[ni][same], pos_u[pi][same]
+    net = w[neg_s] + w[pos_s]
+    new_w = w.copy()
+    drop = [neg_s[net == 0], pos_s[net == 0]]
+    pos_net = net > 0
+    if pos_net.any():
+        new_w[pos_s[pos_net]] = net[pos_net]
+        drop.append(neg_s[pos_net])
+    neg_net = net < 0
+    if neg_net.any():
+        new_w[neg_s[neg_net]] = net[neg_net]
+        drop.append(pos_s[neg_net])
+    keep = np.setdiff1d(np.arange(len(rid)), np.concatenate(drop))
+    out = dict(delta)
+    out[WEIGHT_COL] = new_w
+    return take_rows(out, keep)
 
 
 @jax.jit
@@ -371,10 +449,19 @@ def _right_mapping_changes(
 
 
 def zset_join_delta(
-    left_old, left_delta: Table, right_old: Table, right_delta: Table
+    left_old, left_delta: Table, right_old: Table, right_delta: Table,
+    stats: dict | None = None,
 ) -> tuple[Table, int]:
     """Weighted delta of ``op_join(left, right)`` given Z-set deltas of both
     sides; returns ``(delta, corrected_rows)``.
+
+    When ``stats`` (a dict) is passed, it is filled with the observed
+    partial-fallback profile of this call: ``affected_keys`` (candidate keys
+    whose PK first-occurrence mapping changed), ``matched_keys`` (affected
+    keys that actually matched surviving old-left rows — the corrections
+    that cost real work), and ``corrected_rows``. The ratio
+    ``matched_keys / affected_keys`` is the fallback rate the planner's
+    correction-cost term can be calibrated with.
 
     Left retractions join the *old* right side (reproducing the exact old
     output payloads), left insertions join the new right side, and weights
@@ -407,6 +494,7 @@ def zset_join_delta(
     if pos_idx.size:
         parts.append(op_join(take_rows(with_weight(left_delta), pos_idx), right_new))
     corrected = 0
+    affected = matched = 0
     cand = np.unique(np.asarray(right_delta["key"])) if (
         right_delta and n_rows(right_delta)
     ) else np.empty(0, np.int64)
@@ -414,6 +502,7 @@ def zset_join_delta(
         retract_keys, insert_keys = _right_mapping_changes(
             right_old, right_new, cand
         )
+        affected = int(np.union1d(retract_keys, insert_keys).size)
         if retract_keys.size or insert_keys.size:
             # old-left rows still standing after this round's left retractions
             lo = _left_old()
@@ -423,9 +512,11 @@ def zset_join_delta(
             rem = ~np.isin(l_rid, l_retracted) if l_retracted.size else \
                 np.ones(len(l_rid), bool)
             l_keys = np.asarray(lo["key"])
+            matched_keys: set[int] = set()
             if retract_keys.size:
                 sub = np.nonzero(rem & np.isin(l_keys, retract_keys))[0]
                 if sub.size:
+                    matched_keys.update(np.unique(l_keys[sub]).tolist())
                     corr = op_join(
                         with_weight(take_rows(lo, sub), -1), right_old
                     )
@@ -434,11 +525,17 @@ def zset_join_delta(
             if insert_keys.size:
                 sub = np.nonzero(rem & np.isin(l_keys, insert_keys))[0]
                 if sub.size:
+                    matched_keys.update(np.unique(l_keys[sub]).tolist())
                     corr = op_join(
                         with_weight(take_rows(lo, sub), +1), right_new
                     )
                     corrected += n_rows(corr)
                     parts.append(corr)
+            matched = len(matched_keys)
+    if stats is not None:
+        stats["affected_keys"] = affected
+        stats["matched_keys"] = matched
+        stats["corrected_rows"] = corrected
     if not parts:
         # schema-only result: an empty slice of the left delta (same columns
         # as the left side) joined against the right — no left read needed
@@ -549,6 +646,25 @@ def empty_like(schema: dict[str, np.dtype]) -> Table:
 
 def table_schema(table: Table) -> dict[str, np.dtype]:
     return {k: np.asarray(v).dtype for k, v in table.items()}
+
+
+def assert_tables_bitwise(a: Table, b: Table, context: str = "") -> None:
+    """Raise AssertionError (naming the first divergent column) unless two
+    tables are bitwise identical: same column set, dtypes, shapes, bytes.
+    The shared check behind every refresh-equivalence claim."""
+    if set(a) != set(b):
+        raise AssertionError(
+            f"{context}: column sets differ {sorted(a)} != {sorted(b)}"
+        )
+    for col in a:
+        va, vb = np.asarray(a[col]), np.asarray(b[col])
+        if va.dtype != vb.dtype or va.shape != vb.shape or (
+            va.tobytes() != vb.tobytes()
+        ):
+            raise AssertionError(
+                f"{context}.{col}: not bitwise identical "
+                f"({va.dtype}{va.shape} vs {vb.dtype}{vb.shape})"
+            )
 
 
 def concat_tables(parts: list[Table]) -> Table:

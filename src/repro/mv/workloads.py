@@ -226,6 +226,7 @@ def incremental_view(
     spec: UpdateSpec,
     round_idx: int = 1,
     sizes: Sequence[float] | None = None,
+    fallback_rate: float = 1.0,
 ) -> Workload:
     """The per-round refresh view of a workload: a same-shape Workload whose
     node sizes are the round's *update bytes* (insert-only delta for
@@ -236,7 +237,9 @@ def incremental_view(
     this view to ``score_graph`` / the simulator / the planner is what makes
     every layer update-mode aware. ``sizes`` overrides the per-node full
     sizes (e.g. observed bytes from the store manifest — the paper's
-    "metrics from previous runs")."""
+    "metrics from previous runs"); ``fallback_rate`` calibrates the JOIN
+    correction-cost term with the partial-fallback rate observed in earlier
+    rounds (``speedup.propagate_update``)."""
     from ..core.speedup import propagate_update
 
     base_sizes = [float(s) for s in (sizes if sizes is not None else
@@ -253,6 +256,7 @@ def incremental_view(
         mode=spec.mode,
         update_frac=spec.update_frac,
         delete_frac=spec.delete_frac,
+        join_fallback_rate=fallback_rate,
     )
     nodes = [
         dataclasses.replace(
@@ -273,6 +277,7 @@ def incremental_view(
         statuses=upd.statuses,
         full_sizes=upd.full_sizes,
         lineage=upd.lineage,
+        fallback_rate=fallback_rate,
     )
     return Workload(
         name=f"{workload.name}@{spec.mode}-r{round_idx}", nodes=nodes, meta=meta

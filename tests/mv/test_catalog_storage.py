@@ -236,6 +236,33 @@ def test_diskstore_tombstone_crash_atomicity_and_stale_tmp_sweep(tmp_path):
     assert list(tmp_path.glob("mv.*")) == []
 
 
+def test_diskstore_tombstone_debt_accounting(tmp_path):
+    """Appends accumulate a tombstone-debt estimate (tombstone rows plus
+    their victims); full rewrites — consolidation included — reset it."""
+    store = DiskStore(tmp_path)
+    base = {"rid": np.arange(16, dtype=np.int64),
+            "x": np.arange(16, dtype=np.float32)}
+    store.write("mv", base)
+    assert store.tombstone_bytes("mv") == 0
+    assert store.live_bytes("mv") == table_nbytes(base)
+    # insert-only appends carry no debt
+    store.append("mv", {"rid": np.arange(16, 20, dtype=np.int64),
+                        "x": np.zeros(4, np.float32)})
+    assert store.tombstone_bytes("mv") == 0
+    kill = _zset([0, 1, 2, 3], -1, x=np.zeros(4, np.float32))
+    store.append("mv", kill)
+    debt = store.tombstone_bytes("mv")
+    assert debt > table_nbytes(kill)  # tombstones + their victims
+    assert store.live_bytes("mv") == store.manifest()["mv"] - debt
+    assert store.tombstone_ratio("mv") > 0.0
+    store.append("mv", _zset([4, 5], -1, x=np.zeros(2, np.float32)))
+    assert store.tombstone_bytes("mv") > debt  # debt accumulates
+    store.consolidate("mv")
+    assert store.tombstone_bytes("mv") == 0
+    assert store.tombstone_ratio("mv") == 0.0
+    assert store.live_bytes("mv") == store.manifest()["mv"]
+
+
 def test_diskstore_delete_removes_parts_and_tmp(tmp_path):
     store = DiskStore(tmp_path)
     t = {"x": np.arange(8)}

@@ -271,7 +271,10 @@ def test_highk_round_budget_and_plan_validity_sweep(seed, k, kind):
             assert r.plan.n_workers == k  # solved for the executing k
             view = (
                 wl if r.round_idx == 0
-                else incremental_view(wl, spec, 1, sizes=r.sizes)
+                else incremental_view(
+                    wl, spec, 1, sizes=r.sizes,
+                    fallback_rate=r.fallback_stats["rate_used"],
+                )
             )
             g = view.to_graph(CM)
             assert g.is_topological(r.plan.order)
@@ -386,6 +389,75 @@ def test_simulated_incremental_rounds_beat_full_rounds():
     assert res[("incremental", "serial")] < res[("full", "serial")]
     assert res[("full", "serial")] / res[("full", "sc")] > 1.0
     assert res[("incremental", "serial")] / res[("incremental", "sc")] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# (c) tombstone consolidation scheduler + fallback-rate calibration
+# ---------------------------------------------------------------------------
+
+def test_consolidation_policy_bounds_tombstone_debt(tmp_path):
+    """ROADMAP debt: a long DELETE-heavy scenario with the consolidation
+    scheduler armed keeps every MV's tombstone debt bounded by the
+    configured ratio (the policy fires inside the round's timed window),
+    stays bitwise identical to the full recompute, and without the policy
+    the debt grows past the threshold."""
+    ratio = 0.5
+    wl = build(tmp_path, n_nodes=8, seed=4, bytes_per_root=1 << 13)
+    budget = sum(n.size for n in wl.nodes) * 0.4
+    kw = dict(ingest_frac=0.05, delete_frac=0.2, n_rounds=5)
+    spec = UpdateSpec(mode="incremental", **kw)
+    store = DiskStore(tmp_path / "pol")
+    rep = run_scenario(wl, store, budget, spec, CM, consolidate_ratio=ratio)
+    assert sum(r.run.consolidations for r in rep.rounds) > 0
+    for n in wl.nodes:
+        assert store.tombstone_ratio(n.name) <= ratio + 1e-9, n.name
+    # un-scheduled baseline: debt exceeds the threshold somewhere
+    bare = DiskStore(tmp_path / "bare")
+    run_scenario(wl, bare, budget, spec, CM)
+    assert any(bare.tombstone_ratio(n.name) > ratio for n in wl.nodes)
+    # correctness is untouched by consolidation timing
+    full = DiskStore(tmp_path / "full")
+    run_scenario(wl, full, budget, UpdateSpec(mode="full", **kw), CM)
+    verify_scenario_equivalence(wl, store, full)
+
+
+def test_join_fallback_rate_observed_and_fed_forward(tmp_path):
+    """Right-side updates trigger partial fallbacks; the engine records the
+    observed affected/matched key profile per round and later rounds'
+    planners use the cumulative observed rate in the correction-cost term."""
+    wl = build(tmp_path, seed=3)
+    reports, _, _ = run_both(
+        tmp_path, wl, dict(ingest_frac=0.1, update_frac=0.2, n_rounds=3)
+    )
+    rounds = reports["incremental"].rounds
+    assert all(r.fallback_stats is not None for r in rounds)
+    assert rounds[1].fallback_stats["rate_used"] == 1.0  # no observations yet
+    aff = sum(r.fallback_stats["affected"] for r in rounds[:2])
+    mat = sum(r.fallback_stats["matched"] for r in rounds[:2])
+    assert aff > 0, "scenario must actually exercise the partial fallback"
+    assert rounds[2].fallback_stats["rate_used"] == pytest.approx(mat / aff)
+    assert 0.0 <= rounds[2].fallback_stats["rate_used"] <= 1.0
+
+
+def test_propagate_update_scales_join_corrections_by_fallback_rate():
+    """The calibrated correction-cost term: a lower observed fallback rate
+    shrinks a JOIN's modeled update bytes under right-side churn without
+    flipping its DELTA status."""
+    from repro.core.speedup import propagate_update
+
+    ops = ["SCAN", "SCAN", "JOIN"]
+    parents = [(), (), (0, 1)]
+    sizes = [1e6, 1e6, 2e6]
+    kw = dict(
+        computes=[0.1] * 3, base_reads=[1e6, 1e6, 0.0], ingest={0, 1},
+        frac=0.0, update_frac=0.1,
+    )
+    hi = propagate_update(ops, parents, sizes, **kw)
+    lo = propagate_update(ops, parents, sizes, join_fallback_rate=0.25, **kw)
+    zero = propagate_update(ops, parents, sizes, join_fallback_rate=0.0, **kw)
+    assert hi.statuses[2] == lo.statuses[2] == zero.statuses[2] == DELTA
+    assert lo.update_bytes[2] < hi.update_bytes[2]
+    assert zero.update_bytes[2] <= lo.update_bytes[2]
 
 
 def test_round_zero_is_identical_across_modes(tmp_path):

@@ -400,6 +400,140 @@ def test_consolidate_zset_cancels_exact_noop_pairs():
     assert T.consolidate_zset(t2)["rid"].tolist() == [10, 10, 11, 12]
 
 
+# ---------------------------------------------------------------------------
+# General integer weights (|w| > 1, duplicate-row sources)
+# ---------------------------------------------------------------------------
+
+def expand_units(delta):
+    """|w| unit-weight copies of every row — the explicit multiset a general
+    Z-set delta denotes."""
+    w = T.weights_of(delta)
+    idx = np.repeat(np.arange(len(w)), np.abs(w))
+    out = T.take_rows(delta, idx)
+    out[T.WEIGHT_COL] = np.sign(w)[idx].astype(np.int64)
+    return out
+
+
+def dup_table(seed, key_mod=12, n=60):
+    """Stored content of a duplicate-row source: each base row replicated
+    1..3 times — identical copies under one rid, in rid order."""
+    base = T.make_base_table(n, 4, seed=seed, key_mod=key_mod,
+                             rid_base=T.make_rid_base(0, 0))
+    mult = np.random.default_rng(seed + 11).integers(1, 4, n)
+    return T.take_rows(base, np.repeat(np.arange(n), mult))
+
+
+def general_delta(old, seed, key_mod=12):
+    """Random *well-formed* delta with general weights: retractions target
+    existing rids with multiplicity at most the stored copy count (the
+    multiset algebra is only linear for retractions that have something to
+    retract), positive rows insert 1..3 copies."""
+    rng = np.random.default_rng(seed)
+    rid = np.asarray(old["rid"])
+    uniq, first, counts = np.unique(rid, return_index=True, return_counts=True)
+    n_ret = int(rng.integers(1, max(len(uniq) // 4, 2)))
+    sel = np.sort(rng.permutation(len(uniq))[:n_ret])
+    retract = T.take_rows(old, first[sel])
+    retract[T.WEIGHT_COL] = -np.array(
+        [rng.integers(1, counts[s] + 1) for s in sel], np.int64
+    )
+    n_ins = int(rng.integers(1, 12))
+    ins = T.make_base_table(n_ins, 4, seed=seed + 1, key_mod=key_mod,
+                            rid_base=T.make_rid_base(1, 0))
+    ins[T.WEIGHT_COL] = rng.integers(1, 4, n_ins).astype(np.int64)
+    return {k: np.concatenate([retract[k], ins[k]]) for k in retract}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_apply_delta_general_weights_equal_unit_expansion(seed):
+    """A ``+w`` row inserts w copies and a ``-w`` row retracts w copies:
+    applying the weighted delta equals applying its explicit unit-weight
+    expansion, bitwise."""
+    old = dup_table(seed)
+    delta = general_delta(old, seed + 3)
+    assert_bitwise(T.apply_delta(old, delta),
+                   T.apply_delta(old, expand_units(delta)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_agg_general_weights_equal_unit_expansion(seed):
+    """op_agg multiplies contributions by the weight — identical to
+    aggregating |w| unit-weight copies — and merge_agg stays exact against
+    the full recompute over the consolidated content."""
+    old = dup_table(seed, key_mod=8)
+    delta = general_delta(old, seed + 7, key_mod=8)
+    assert_bitwise(T.op_agg(delta), T.op_agg(expand_units(delta)))
+    full = T.op_agg(T.apply_delta(old, delta))
+    inc = T.merge_agg(T.op_agg(old), T.op_agg(delta))
+    assert_bitwise(full, inc)
+
+
+def test_apply_delta_retracts_exact_copy_count():
+    """-2 removes two of three identical stored copies; a surplus retraction
+    is clamped to the copies present."""
+    old = {
+        "rid": np.array([1, 2, 2, 2, 3], np.int64),
+        "key": np.array([10, 20, 20, 20, 30], np.int64),
+        "c0": np.array([1.0, 2.0, 2.0, 2.0, 3.0], np.float32),
+    }
+    delta = {
+        "rid": np.array([2, 3], np.int64),
+        "key": np.array([20, 30], np.int64),
+        "c0": np.array([2.0, 3.0], np.float32),
+        "weight": np.array([-2, -5], np.int64),
+    }
+    out = T.apply_delta(old, delta)
+    assert out["rid"].tolist() == [1, 2]
+    # a +3 insertion lands three identical adjacent copies in rid order
+    ins = {
+        "rid": np.array([2], np.int64),
+        "key": np.array([20], np.int64),
+        "c0": np.array([9.0], np.float32),
+        "weight": np.array([3], np.int64),
+    }
+    out2 = T.apply_delta(out, ins)
+    assert out2["rid"].tolist() == [1, 2, 2, 2, 2]
+    assert out2["c0"].tolist() == [1.0, 2.0, 9.0, 9.0, 9.0]
+
+
+def test_consolidate_zset_nets_general_weights():
+    """-2 against +3 under one rid with identical payload nets to +1; a full
+    cancellation still drops both rows."""
+    d = {
+        "rid": np.array([7, 7, 8], np.int64),
+        "key": np.array([1, 1, 2], np.int64),
+        "c0": np.array([4.0, 4.0, 5.0], np.float32),
+        "weight": np.array([-2, 3, 1], np.int64),
+    }
+    out = T.consolidate_zset(d)
+    assert out["rid"].tolist() == [7, 8]
+    assert out["weight"].tolist() == [1, 1]
+    d["weight"] = np.array([-3, 3, 1], np.int64)
+    out = T.consolidate_zset(d)
+    assert out["rid"].tolist() == [8]
+    # net on the negative side keeps the retraction row
+    d["weight"] = np.array([-3, 1, 1], np.int64)
+    out = T.consolidate_zset(d)
+    assert out["rid"].tolist() == [7, 8]
+    assert out["weight"].tolist() == [-2, 1]
+
+
+def test_weighted_nbytes_size_model():
+    """The weighted catalog size model: a delta expands to per-row payload
+    bytes x its positive multiplicity; unweighted tables keep their
+    physical size."""
+    t = T.make_base_table(10, 3, seed=0, rid_base=T.make_rid_base(0, 0))
+    phys = sum(np.asarray(v).nbytes for v in t.values())
+    assert T.weighted_nbytes(t) == phys
+    d = T.with_weight(t)
+    d["weight"] = np.full(10, 3, np.int64)
+    assert T.weighted_nbytes(d) == 3 * phys
+    d["weight"][:5] = -1  # retractions carry no live content
+    assert T.weighted_nbytes(d) == round(phys * 1.5)
+
+
 def test_weighted_project_keeps_full_table_width():
     """A weighted delta must project to exactly the columns the full-table
     projection keeps (plus weight) — the weight column cannot perturb the
