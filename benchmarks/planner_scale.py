@@ -1,0 +1,127 @@
+"""Planner scaling: hierarchical vs flat partition-granular solves over P.
+
+The flat ``solve_partitioned`` runs Algorithm 2 over the full P-expanded
+graph — an O(n·P)-item MKP plus an n·P-node MA-DFS per iteration — which is
+what makes per-round planning the bottleneck at P >= 32 (the optimization-
+time axis the paper studies in Fig. 13, pushed to partition granularity).
+The hierarchical planner (``core.altopt.solve_hierarchical``, DESIGN.md §8)
+decomposes: per-MV benefit-curve columns, a greedy outer knapsack plus
+per-slice exact MKPs under a partition-major order solved once at base
+size.
+
+This sweep runs both planners on the skewed hot-MV workload (the
+``partition_sweep`` scenario) across P ∈ {1, 8, 32, 64, 128}, measuring
+solve wall time and the end-to-end build speedup each plan achieves in the
+event simulator. Acceptance (asserted, the PR-5 criteria):
+
+* at P = 64 the hierarchical solve is >= 10x faster than the flat solve;
+* the hierarchical plan's end-to-end S/C speedup stays within 5% of the
+  flat plan's at every swept (P, k);
+* at P = 1 the hierarchical path returns bitwise the flat ``altopt.solve``
+  plan (the degenerate case stays exact).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import serial_plan, solve, solve_hierarchical, solve_partitioned
+from repro.core.speedup import EFFECTIVE_NFS_COST_MODEL, partition_shares
+from repro.mv import partition_workload
+from repro.mv.engine import simulate_events
+
+from .common import fmt_table, save_json
+from .partition_sweep import SHARE_SEED, SKEW, skewed_workload
+
+SOLVE_RATIO_FLOOR = 10.0   # hierarchical must be >= 10x faster at P=64
+E2E_TOLERANCE = 0.95       # ... at >= 95% of the flat plan's e2e speedup
+
+
+def run(quick: bool = False):
+    cm = EFFECTIVE_NFS_COST_MODEL
+    wl, hot, budget = skewed_workload()
+    ps = (1, 8, 64) if quick else (1, 8, 32, 64, 128)
+    ks = (1,) if quick else (1, 4)
+    out = {
+        "budget_bytes": budget,
+        "hot_mv": wl.nodes[hot].name,
+        "skew": SKEW,
+        "n_nodes": wl.n,
+        "sweep": {},
+    }
+    rows = []
+    g = wl.to_graph(cm)
+    for k in ks:
+        for P in ps:
+            shares = partition_shares(P, skew=SKEW, seed=SHARE_SEED)
+            t0 = time.perf_counter()
+            flat = solve_partitioned(
+                g, budget, P, cost_model=cm, shares=shares, n_workers=k
+            )
+            t_flat = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            hier = solve_hierarchical(
+                g, budget, P, cost_model=cm, shares=shares, n_workers=k
+            )
+            t_hier = time.perf_counter() - t0
+            pwl, _ = partition_workload(wl, P, shares=shares)
+            serial_ref = simulate_events(
+                pwl, serial_plan(pwl.to_graph(cm)), cm, mode="serial",
+                n_workers=k,
+            ).end_to_end
+            e2e_flat = serial_ref / simulate_events(
+                pwl, flat.plan, cm, mode="sc", n_workers=k
+            ).end_to_end
+            e2e_hier = serial_ref / simulate_events(
+                pwl, hier.plan, cm, mode="sc", n_workers=k
+            ).end_to_end
+            r = {
+                "solve_flat_s": t_flat,
+                "solve_hier_s": t_hier,
+                "solve_ratio": t_flat / t_hier,
+                "score_flat": flat.plan.score,
+                "score_hier": hier.plan.score,
+                "e2e_flat": e2e_flat,
+                "e2e_hier": e2e_hier,
+                "e2e_rel": e2e_hier / e2e_flat,
+            }
+            out["sweep"][f"P{P}_k{k}"] = r
+            rows.append([
+                f"{P}", f"{k}", f"{t_flat*1e3:.0f}ms", f"{t_hier*1e3:.0f}ms",
+                f"{r['solve_ratio']:.0f}x", f"{e2e_flat:.2f}x",
+                f"{e2e_hier:.2f}x", f"{r['e2e_rel']:.3f}",
+            ])
+            if P == 1:
+                # the degenerate case must be bitwise the whole-MV solve
+                ref = solve(g, budget=budget, n_workers=k)
+                assert hier.plan.order == ref.order, "P=1 order diverged"
+                assert hier.plan.flagged == ref.flagged, "P=1 flags diverged"
+                assert hier.plan.score == ref.score, "P=1 score diverged"
+
+    print(f"\n== Planner scaling: skewed workload, n={wl.n}, "
+          f"budget {budget/1e9:.2f}GB (Zipf {SKEW} shares) ==")
+    print(fmt_table(
+        ["P", "k", "flat", "hier", "ratio", "e2e flat", "e2e hier", "rel"],
+        rows,
+    ))
+
+    # acceptance: 10x solve-time win at P=64, e2e within 5% everywhere
+    for k in ks:
+        r64 = out["sweep"][f"P64_k{k}"]
+        assert r64["solve_ratio"] >= SOLVE_RATIO_FLOOR, (
+            f"k={k}: hierarchical solve only {r64['solve_ratio']:.1f}x "
+            f"faster than flat at P=64 (need >= {SOLVE_RATIO_FLOOR}x)"
+        )
+        for P in ps:
+            r = out["sweep"][f"P{P}_k{k}"]
+            assert r["e2e_rel"] >= E2E_TOLERANCE, (
+                f"P={P} k={k}: hierarchical e2e speedup {r['e2e_hier']:.3f}x "
+                f"below {E2E_TOLERANCE:.0%} of flat's {r['e2e_flat']:.3f}x"
+            )
+    best = max(r["solve_ratio"] for r in out["sweep"].values())
+    print(f"best hierarchical solve-time win: {best:.0f}x")
+    save_json("planner_scale", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

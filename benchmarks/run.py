@@ -21,6 +21,7 @@ from . import (
     incremental,
     parallel_sweep,
     partition_sweep,
+    planner_scale,
     real_executor,
     roofline,
     table4_readtime,
@@ -35,6 +36,7 @@ MODULES = [
     ("table5_cluster", table5_cluster.run),
     ("parallel_sweep", parallel_sweep.run),
     ("partition_sweep", partition_sweep.run),
+    ("planner_scale", planner_scale.run),
     ("incremental", incremental.run),
     ("fig13_opttime", fig13_opttime.run),
     ("fig14_sweep", fig14_sweep.run),
@@ -51,7 +53,10 @@ MODULES = [
 # partition_sweep additionally asserts the partition-granular acceptance
 # claim: with the budget below the hottest MV, P>=8 S/C strictly beats
 # whole-MV S/C on the skewed workload (JSON artifact uploaded by CI).
-SMOKE_MODULES = ["incremental", "partition_sweep"]
+# planner_scale asserts the hierarchical-planner criteria: >= 10x faster
+# solves than flat at P=64, end-to-end speedup within 5% of flat across the
+# sweep, and bitwise P=1 degeneracy.
+SMOKE_MODULES = ["incremental", "partition_sweep", "planner_scale"]
 
 
 def main(argv=None):

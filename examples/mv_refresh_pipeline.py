@@ -5,15 +5,19 @@ deterministic batch iterator.
 
     PYTHONPATH=src python examples/mv_refresh_pipeline.py
 """
+import os
 import shutil
 import tempfile
 from pathlib import Path
 
 from repro.data import BatchIterator, DataConfig, materialize_dataset
 
+SMOKE = bool(os.environ.get("SC_SMOKE"))  # CI-sized variant
+
 root = Path(tempfile.mkdtemp(prefix="sc_pipeline_"))
 try:
-    dcfg = DataConfig(n_shards=4, docs_per_shard=64, doc_len=256,
+    dcfg = DataConfig(n_shards=2 if SMOKE else 4,
+                      docs_per_shard=32 if SMOKE else 64, doc_len=256,
                       seq_len=65, catalog_budget_bytes=2 << 20)
     out = materialize_dataset(dcfg, root)
     plan, report, wl = out["plan"], out["report"], out["workload"]

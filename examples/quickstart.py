@@ -10,12 +10,15 @@
    on disk (the SLA).
 4. Compare wall-clock vs the serial baseline on a throttled store.
 """
+import os
 import shutil
 import tempfile
 from pathlib import Path
 
 from repro.core import CostModel, serial_plan, solve
 from repro.mv import Controller, DiskStore, calibrate_sizes, generate_workload, realize_workload
+
+SMOKE = bool(os.environ.get("SC_SMOKE"))  # CI-sized variant
 
 # a slow storage tier (emulates the paper's NFS) and a fast memory tier
 cost_model = CostModel(disk_read_bw=40e6, disk_write_bw=25e6,
@@ -26,7 +29,7 @@ root = Path(tempfile.mkdtemp(prefix="sc_quickstart_"))
 try:
     # 1. a 12-node MV refresh workload with real JAX table operators
     workload = realize_workload(generate_workload(12, seed=4),
-                                bytes_per_root=1 << 19)
+                                bytes_per_root=1 << (16 if SMOKE else 19))
     workload = calibrate_sizes(workload, DiskStore(root / "calib"))
     graph = workload.to_graph(cost_model)
 

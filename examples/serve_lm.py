@@ -4,6 +4,7 @@ cache mixes KV tensors and SSM states.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
+import os
 import time
 
 import jax
@@ -12,13 +13,16 @@ from repro.configs import get_config
 from repro.models import init_params
 from repro.serve.step import greedy_generate
 
+SMOKE = bool(os.environ.get("SC_SMOKE"))  # CI-sized variant
+MAX_NEW = 4 if SMOKE else 12
+
 for arch in ("musicgen-large", "jamba-v0.1-52b"):
     cfg = get_config(arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
                                 cfg.vocab_size)
     t0 = time.perf_counter()
-    out = greedy_generate(cfg, params, prompt, max_new=12)
+    out = greedy_generate(cfg, params, prompt, max_new=MAX_NEW)
     dt = time.perf_counter() - t0
     print(f"{arch:18s} ({cfg.family:6s}): generated {out.shape} in {dt:.2f}s "
           f"-> {out[0, :8].tolist()}")

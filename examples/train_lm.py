@@ -9,6 +9,8 @@ Smoke run (~1M params, 40 steps, <1 min):
 """
 import argparse
 import dataclasses
+import os
+import tempfile
 
 from repro.configs import get_config
 from repro.data import DataConfig
@@ -20,8 +22,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="~100M params, 200 steps")
-    ap.add_argument("--out", default="results/example_train")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.out is None:
+        # SC_SMOKE (the CI docs job) gets a fresh directory: resuming from a
+        # previous run's checkpoints would leave zero steps to execute
+        args.out = (
+            tempfile.mkdtemp(prefix="sc_train_")
+            if os.environ.get("SC_SMOKE")
+            else "results/example_train"
+        )
 
     base = get_config("stablelm-3b")
     if args.full:
@@ -35,7 +45,7 @@ def main():
     else:
         cfg = base.reduced(n_layers=4, d_model=128, n_heads=4, n_kv_heads=4,
                            head_dim=32, d_ff=256, vocab_size=2048)
-        steps, batch = 40, 8
+        steps, batch = (12 if os.environ.get("SC_SMOKE") else 40), 8
         seq = 129
     cfg = dataclasses.replace(cfg, remat_policy="planner")
     n_params = cfg.param_count()

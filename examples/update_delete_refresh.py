@@ -11,6 +11,7 @@ end to show the storage-side lifecycle.
 
     PYTHONPATH=src python examples/update_delete_refresh.py
 """
+import os
 import shutil
 import tempfile
 from collections import Counter
@@ -27,19 +28,22 @@ from repro.mv import (
     verify_scenario_equivalence,
 )
 
+SMOKE = bool(os.environ.get("SC_SMOKE"))  # CI-sized variant
+N_ROUNDS = 2 if SMOKE else 3
+
 CM = CostModel(disk_read_bw=60e6, disk_write_bw=40e6, mem_read_bw=1e12,
                mem_write_bw=1e12, disk_latency=2e-4)
 
 root = Path(tempfile.mkdtemp(prefix="sc_zset_"))
 try:
-    wl = realize_workload(generate_workload(14, seed=5), bytes_per_root=1 << 18)
+    wl = realize_workload(generate_workload(14, seed=5), bytes_per_root=1 << (15 if SMOKE else 18))
     wl = calibrate_sizes(wl, DiskStore(root / "calib"))
     budget = sum(n.size for n in wl.nodes) * 0.5
 
     reports, stores = {}, {}
     for mode in ("full", "incremental"):
         spec = UpdateSpec(mode=mode, ingest_frac=0.1, update_frac=0.05,
-                          delete_frac=0.03, n_rounds=3)
+                          delete_frac=0.03, n_rounds=N_ROUNDS)
         stores[mode] = DiskStore(root / mode, read_bw=60e6, write_bw=40e6,
                                  latency=2e-4)
         reports[mode] = run_scenario(wl, stores[mode], budget, spec, CM)
@@ -48,7 +52,7 @@ try:
     print("=== Mixed insert/update/delete refresh (bitwise-identical MVs) ===")
     for mode, rep in reports.items():
         print(f"\n{mode}: build {rep.build_seconds:.2f}s, "
-              f"refresh {rep.refresh_seconds:.2f}s over 3 rounds")
+              f"refresh {rep.refresh_seconds:.2f}s over {N_ROUNDS} rounds")
         for r in rep.rounds[1:]:
             mix = Counter(r.statuses.values())
             print(f"  round {r.round_idx}: {r.elapsed:.2f}s  "

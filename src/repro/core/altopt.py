@@ -14,6 +14,22 @@ The paper's pseudocode (line 5) compares total flagged *sizes*; its text
 objective — we follow the text and compare scores, which also guarantees
 convergence. A hard iteration cap is a safety net (the paper observes < 10
 iterations at 100 nodes).
+
+Layer contract: every function here returns a ``Plan`` (or wraps one in a
+``PartitionedPlan``) that is **feasible** — its flagged set fits ``budget``
+bytes at every step under the worst-case ``n_workers``-worker interleaving
+of its order (DESIGN.md §2) — and whose order is topological. Callers
+(engine, scenarios, benchmarks) rely on that invariant unconditionally;
+both ``solve`` and ``hierarchical_plan`` assert it before returning.
+
+Three entry points share it:
+
+* ``solve``              — Algorithm 2 on any graph (the flat/exact path);
+* ``solve_partitioned``  — ``solve`` over the P-way partition expansion:
+  fractional (per-partition) residency, DESIGN.md §7;
+* ``solve_hierarchical`` — the decomposed partition-granular solve that
+  stays fast at large ``n·P``, exact-fallback below ``FLAT_THRESHOLD``
+  and always at P=1, DESIGN.md §8.
 """
 from __future__ import annotations
 
@@ -23,7 +39,7 @@ from typing import Sequence
 
 from .graph import MVGraph
 from .madfs import ORDER_SOLVERS
-from .mkp import NODE_SOLVERS
+from .mkp import NODE_SOLVERS, greedy_column_select
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,6 +197,321 @@ def solve_partitioned(
         expanded = rescore(expanded, cost_model)
     return PartitionedPlan(
         plan=solve(expanded, budget, **solve_kw),
+        n_partitions=P,
+        index=index,
+    )
+
+
+# n·P at or below this, the flat (exact) partitioned solve stays fast enough
+# that the hierarchical decomposition has nothing to buy — and falling back
+# keeps small instances bitwise identical to ``solve_partitioned``.
+FLAT_THRESHOLD = 256
+
+
+def hierarchical_plan(
+    expanded: MVGraph,
+    budget: float,
+    n_partitions: int,
+    n_workers: int = 1,
+    max_entry_bytes: float | None = None,
+    order_solver: str = "madfs",
+    order_kwargs: dict | None = None,
+    max_iters: int | None = None,
+    flat_threshold: int = FLAT_THRESHOLD,
+) -> Plan:
+    """Hierarchical partition-granular solve over an already-expanded graph.
+
+    ``max_iters`` caps the alternation on whichever path runs — it is
+    forwarded to the exact-fallback ``solve`` too, so a caller-configured
+    planning budget holds on both sides of ``flat_threshold``; ``None``
+    means each path's own default (8 for the decomposition, ``solve``'s 50
+    for the fallback, keeping the fallback bitwise ``solve_partitioned``).
+
+    ``expanded`` must follow the ``MVGraph.expand_partitions`` index layout
+    (node ``v * P + p`` is partition ``p`` of base MV ``v`` — what
+    ``partition_workload``'s view graphs and ``score_partitioned_graph``
+    produce). Instead of one flat MKP over all ``n·P`` items, the solve
+    decomposes (DESIGN.md §8):
+
+    1. **Partition-major order** — the plan runs the whole DAG once per
+       partition slice, which is topological (edges are co-partitioned) and
+       keeps each pinned partition resident only across its own slice's
+       short window — the interleaving the flat planner spends its n·P-item
+       MKP/MA-DFS budget rediscovering. The shared within-slice order comes
+       from one full Algorithm-2 solve of the *binding* slice (the largest
+       byte share — the only slice whose capacity constraints truly bind;
+       colder slices reuse its order, which costs them nothing because
+       their scaled-down sizes fit almost any order). Slices are sequenced
+       coldest-first so the big partitions' background writes land while
+       the writer channels still have queue depth to absorb them.
+    2. **Inner pass, per MV** — rank the MV's partitions by marginal benefit
+       density (``MVGraph.partition_benefit_curves``); the prefix
+       configurations of that ranking are the MV's candidate columns.
+    3. **Outer knapsack** — a density-ordered greedy over all MVs' columns
+       (``mkp.greedy_column_select``) against the exact per-step byte
+       profile of the partition-major windows, then a per-slice exact
+       refinement: at the chosen order the expanded MKP *separates by
+       slice* (a partition's residency window never leaves its slice, up to
+       the k-worker spill), so ``simplified_mkp`` on each n-node slice
+       subgraph replaces the flat solver's one n·P-item branch-and-bound.
+       The better-scoring of the two selections wins.
+    4. **Alternate with ordering** — re-run the order solver at base
+       granularity against the *selected* bytes per MV (Algorithm 2's
+       alternation, n items instead of n·P) until the selected score stops
+       improving.
+
+    The returned plan is verified feasible against the expanded graph's own
+    k-worker windows — the same invariant ``solve`` guarantees (the
+    per-slice refinement ignores the ≤ k-1-step spill across slice
+    boundaries, so a repair pass drops lowest-density pins in the rare case
+    the boundary overlap overflows). Instances with ``n·P <=
+    flat_threshold`` — and always ``P == 1`` — take the exact path: the
+    flat ``solve`` over ``expanded``, bitwise identical to
+    ``solve_partitioned``.
+    """
+    P = max(int(n_partitions), 1)
+    if expanded.n % P != 0:
+        raise ValueError(
+            f"graph with {expanded.n} nodes is not a {P}-way expansion"
+        )
+    if P == 1 or expanded.n <= flat_threshold:
+        return solve(
+            expanded,
+            budget,
+            order_solver=order_solver,
+            order_kwargs=order_kwargs,
+            n_workers=n_workers,
+            max_entry_bytes=max_entry_bytes,
+            **({} if max_iters is None else {"max_iters": max_iters}),
+        )
+    max_iters = 8 if max_iters is None else max_iters
+    t_start = time.perf_counter()
+    n_workers = max(int(n_workers), 1)
+    n_base = expanded.n // P
+    base_edges = set()
+    for a, b in expanded.edges:
+        if a % P != b % P:
+            raise ValueError(
+                "expanded graph has a cross-partition edge; hierarchical "
+                "planning requires the co-partitioned expand_partitions "
+                "layout"
+            )
+        base_edges.add((a // P, b // P))
+    curves = expanded.partition_benefit_curves(P)
+    # per-MV whole sizes/scores only seed the ordering graph; the alternation
+    # below re-sizes it with each iteration's *selected* bytes
+    whole_scores = [sum(c.scores) for c in curves]
+    base = MVGraph(
+        n_base, tuple(sorted(base_edges)),
+        tuple(sum(c.sizes) for c in curves), tuple(whole_scores),
+        names=tuple(expanded.names[v * P].rsplit("@p", 1)[0]
+                    for v in range(n_base)),
+    )
+    from .graph import positions
+
+    def slice_graph(p: int) -> MVGraph:
+        return MVGraph(
+            n_base,
+            base.edges,
+            tuple(expanded.sizes[v * P + p] for v in range(n_base)),
+            tuple(expanded.scores[v * P + p] for v in range(n_base)),
+            base.names,
+        )
+
+    # slices execute coldest-first (ascending per-partition byte share):
+    # cross-slice edges don't exist, so slice sequencing is free — and
+    # saving the big partitions for last lets their background writes land
+    # once the writer channels already have queue depth, instead of starving
+    # the writers behind the hot slice's long base-table scans at t=0
+    slice_bytes = [
+        sum(expanded.sizes[v * P + p] for v in range(n_base))
+        for p in range(P)
+    ]
+    slice_seq = sorted(range(P), key=lambda p: slice_bytes[p])
+    slice_rank = {p: q for q, p in enumerate(slice_seq)}
+
+    def slice_windows(tau: Sequence[int]) -> list[list[tuple[int, int]]]:
+        """Exact expanded residency window of every (v, p) under the
+        partition-major order built from base order ``tau``: partition p of
+        v executes at step ``rank(p)*n + pos(v)`` and releases at
+        ``rank(p)*n + lc(v) + k - 1`` (its last child is in the same slice;
+        the engine's window discipline adds the k-1 completion slack)."""
+        pos = positions(tau)
+        lc = base.last_child_pos(tau)
+        top = n_base * P - 1
+        return [
+            [
+                (slice_rank[p] * n_base + pos[v],
+                 min(slice_rank[p] * n_base + lc[v] + n_workers - 1, top))
+                for p in range(P)
+            ]
+            for v in range(n_base)
+        ]
+
+    def sel_score(chosen: Sequence[Sequence[int]]) -> float:
+        return sum(
+            expanded.scores[v * P + p]
+            for v, pids in enumerate(chosen)
+            for p in pids
+        )
+
+    from .mkp import simplified_mkp
+
+    def select(tau: Sequence[int]) -> tuple[list[list[int]], float]:
+        """Best selection for order ``tau``: greedy over the benefit-curve
+        columns (exact windows incl. cross-slice spill) vs the per-slice
+        exact MKP refinement (spill-blind; repaired at the end)."""
+        g_chosen = greedy_column_select(
+            curves, budget, slice_windows(tau), n_base * P, max_entry_bytes
+        )
+        g_score = sel_score(g_chosen)
+        m_chosen: list[list[int]] = [[] for _ in range(n_base)]
+        for p in range(P):
+            for v in simplified_mkp(
+                slice_graph(p), budget, tau,
+                n_workers=n_workers, max_entry_bytes=max_entry_bytes,
+            ):
+                m_chosen[v].append(p)
+        m_score = sel_score(m_chosen)
+        return (m_chosen, m_score) if m_score > g_score else (
+            g_chosen, g_score
+        )
+
+    order_fn = ORDER_SOLVERS[order_solver]
+    order_kwargs = order_kwargs or {}
+    # the binding slice — the only one whose capacity constraints truly
+    # bind — gets a full Algorithm-2 solve at base size; its order seeds
+    # (and usually decides) the shared within-slice order
+    tau = list(
+        solve(
+            slice_graph(max(range(P), key=lambda p: slice_bytes[p])),
+            budget,
+            order_solver=order_solver,
+            order_kwargs=order_kwargs,
+            n_workers=n_workers,
+            max_entry_bytes=max_entry_bytes,
+        ).order
+    )
+    # every (selection, order) candidate is feasible by construction (both
+    # selectors only pin what fits that order's windows), so the alternation
+    # keeps whichever pair scored best instead of gating each reorder on the
+    # previous selection's feasibility (altopt.solve's stricter rule exists
+    # because its MKP step is too expensive to re-run speculatively)
+    chosen: list[list[int]] = [[] for _ in range(n_base)]
+    best_tau = list(tau)
+    score = 0.0
+    iters = 0
+    for iters in range(1, max_iters + 1):
+        cand, cand_score = select(tau)
+        improved = cand_score > score + 1e-12
+        if improved:
+            chosen, score, best_tau = cand, cand_score, list(tau)
+        if iters > 1 and not improved:
+            break
+        # reorder against the *selected* bytes: MA-DFS sees what the catalog
+        # would actually hold under this column choice
+        sel_sizes = tuple(
+            sum(expanded.sizes[v * P + p] for p in pids)
+            for v, pids in enumerate(cand)
+        )
+        order_g = MVGraph(
+            n_base, base.edges, sel_sizes, tuple(whole_scores), base.names
+        )
+        flagged_base = frozenset(v for v, pids in enumerate(cand) if pids)
+        tau_new = order_fn(order_g, flagged_base, **order_kwargs)
+        if not base.is_topological(tau_new) or list(tau_new) == list(tau):
+            break
+        tau = tau_new
+    tau = best_tau
+
+    order: list[int] = []
+    for p in slice_seq:
+        order.extend(v * P + p for v in tau)
+    flagged = set(
+        v * P + p for v, pids in enumerate(chosen) for p in pids
+    )
+    # the per-slice MKP ignores the ≤ k-1-step residency spill across slice
+    # boundaries; if that overlap overflows the budget, shed the least dense
+    # pins until the exact expanded-window check passes
+    while flagged and not expanded.is_feasible(
+        flagged, order, budget, n_workers
+    ):
+        flagged.discard(
+            min(
+                flagged,
+                key=lambda i: expanded.scores[i]
+                / max(expanded.sizes[i], 1e-12),
+            )
+        )
+    flagged = frozenset(flagged)
+    assert expanded.is_feasible(flagged, order, budget, n_workers), (
+        "hierarchical planner produced infeasible plan"
+    )
+    return Plan(
+        order=tuple(order),
+        flagged=flagged,
+        score=expanded.total_score(flagged),
+        peak_memory=expanded.peak_memory(flagged, order, n_workers),
+        avg_memory=expanded.avg_memory(flagged, order),
+        iterations=iters,
+        solve_seconds=time.perf_counter() - t_start,
+        n_workers=n_workers,
+    )
+
+
+def solve_hierarchical(
+    graph: MVGraph,
+    budget: float,
+    n_partitions: int,
+    cost_model=None,
+    shares: Sequence[float] | None = None,
+    flat_threshold: int = FLAT_THRESHOLD,
+    **solve_kw,
+) -> PartitionedPlan:
+    """Partition-granular solve that scales to large P (DESIGN.md §8).
+
+    Drop-in for ``solve_partitioned``: same expansion (``shares`` split,
+    optional ``cost_model`` rescore), same ``PartitionedPlan`` result, but
+    the plan comes from the hierarchical decomposition (``hierarchical_plan``)
+    once ``n·P`` exceeds ``flat_threshold`` — per-MV benefit-curve columns
+    plus a greedy outer knapsack over base-granularity windows — instead of
+    the flat MKP over all ``n·P`` items. Small instances, and always
+    ``P == 1``, fall back to the exact flat path and return bitwise
+    identical plans.
+
+    ``solve_kw`` must be understood by *both* paths — ``n_workers``,
+    ``max_entry_bytes``, ``order_solver``, ``order_kwargs``, ``max_iters``
+    — so a given call plans under one configuration regardless of which
+    side of ``flat_threshold`` the instance lands on; anything else (e.g.
+    a flat-only ``node_solver``) raises instead of being silently ignored
+    on large instances.
+    """
+    P = max(int(n_partitions), 1)
+    unsupported = set(solve_kw) - {
+        "n_workers", "max_entry_bytes", "order_solver", "order_kwargs",
+        "max_iters",
+    }
+    if unsupported:
+        raise TypeError(
+            f"solve_hierarchical does not accept {sorted(unsupported)}: the "
+            "hierarchical path could not honor them, so the same call would "
+            "plan differently on either side of flat_threshold"
+        )
+    if P == 1 or graph.n * P <= flat_threshold:
+        # every supported key maps onto the flat solve too (max_iters is
+        # the alternation cap on both paths)
+        return solve_partitioned(
+            graph, budget, P, cost_model=cost_model, shares=shares, **solve_kw
+        )
+    expanded, index = graph.expand_partitions(P, shares)
+    if cost_model is not None:
+        from .speedup import rescore
+
+        expanded = rescore(expanded, cost_model)
+    return PartitionedPlan(
+        plan=hierarchical_plan(
+            expanded, budget, P, flat_threshold=flat_threshold, **solve_kw
+        ),
         n_partitions=P,
         index=index,
     )

@@ -28,6 +28,19 @@ child may still be running while up to ``k-1`` later nodes complete and admit
 their outputs. Every residency/feasibility query below therefore accepts
 ``n_workers``; ``n_workers=1`` reduces exactly to the paper's serial
 definitions.
+
+Layer contract: this module is pure structure — node indices, byte sizes,
+and score floats; it never touches real tables, cost models, or time. A
+plan whose flagged set satisfies ``is_feasible(flagged, order, M, k)`` here
+is guaranteed to stay within ``M`` catalog bytes under *every* interleaving
+the engine can produce with ``k`` workers — planner (``core.altopt``),
+engine, and simulator all trust this one accounting. Partition support
+keeps the same contract over the P-way expansion: ``expand_partitions``
+produces the co-partitioned graph the partition planner and
+``mv.partition.partition_workload`` agree on (index layout ``v*P + p``,
+shares normalized by ``normalize_shares``), and ``partition_benefit_curves``
+reads per-MV marginal-benefit rankings off an expanded graph for the
+hierarchical planner (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -139,6 +152,8 @@ class MVGraph:
     def peak_memory(
         self, flagged: Iterable[int], order: Sequence[int], n_workers: int = 1
     ) -> float:
+        """Worst-case peak catalog bytes of ``flagged`` under ``order`` —
+        the left side of the paper's hard constraint ``peak <= M``."""
         prof = self.residency_profile(flagged, order, n_workers)
         return max(prof) if prof else 0.0
 
@@ -157,9 +172,12 @@ class MVGraph:
         budget: float,
         n_workers: int = 1,
     ) -> bool:
+        """True iff ``flagged`` fits ``budget`` bytes at every step of
+        ``order`` under the worst ``n_workers``-worker interleaving."""
         return self.peak_memory(flagged, order, n_workers) <= budget + 1e-9
 
     def total_score(self, flagged: Iterable[int]) -> float:
+        """The S/C objective: summed speedup scores of the flagged set."""
         return sum(self.scores[i] for i in set(flagged))
 
     # -- resident sets (MKP constraints) --------------------------------------
@@ -226,8 +244,56 @@ class MVGraph:
         index = tuple((v, p) for v in range(self.n) for p in range(P))
         return MVGraph(self.n * P, edges, sizes, scores, names), index
 
+    def partition_benefit_curves(
+        self, n_partitions: int
+    ) -> tuple["BenefitCurve", ...]:
+        """Per-MV partition benefit curves of a P-way *expanded* graph.
+
+        ``self`` must follow the ``expand_partitions`` index layout (expanded
+        node ``v * P + p`` is partition ``p`` of base node ``v``). For every
+        base node the curve ranks its partitions by marginal benefit density
+        (score per byte, descending, ties broken smallest-first), with
+        cumulative prefix sums: pinning the curve's first ``j`` partitions is
+        the "top-j column" of the hierarchical planner — it buys
+        ``cum_scores[j]`` speedup at ``cum_sizes[j]`` catalog bytes. The
+        density ranking makes each curve's marginal densities non-increasing
+        (a concave benefit frontier), which is what lets a greedy outer
+        knapsack select near-optimal columns (``mkp.greedy_column_select``).
+
+        Returns one ``BenefitCurve`` per base node, in base-node order.
+        """
+        P = max(int(n_partitions), 1)
+        if self.n % P != 0:
+            raise ValueError(
+                f"graph with {self.n} nodes is not a {P}-way expansion"
+            )
+        curves = []
+        for v in range(self.n // P):
+            ranked = sorted(
+                range(P),
+                key=lambda p: (
+                    -(
+                        self.scores[v * P + p]
+                        / max(self.sizes[v * P + p], 1e-12)
+                    ),
+                    self.sizes[v * P + p],
+                    p,
+                ),
+            )
+            curves.append(
+                BenefitCurve(
+                    node=v,
+                    parts=tuple(ranked),
+                    sizes=tuple(self.sizes[v * P + p] for p in ranked),
+                    scores=tuple(self.scores[v * P + p] for p in ranked),
+                )
+            )
+        return tuple(curves)
+
     # -- misc ------------------------------------------------------------------
     def subgraph(self, keep: Sequence[int]) -> "MVGraph":
+        """The induced subgraph on ``keep``, nodes renumbered to
+        ``0..len(keep)-1`` in the given order."""
         remap = {v: i for i, v in enumerate(keep)}
         kset = set(keep)
         edges = tuple(
@@ -248,6 +314,24 @@ class MVGraph:
         g.add_nodes_from(range(self.n))
         g.add_edges_from(self.edges)
         return g
+
+
+@dataclasses.dataclass(frozen=True)
+class BenefitCurve:
+    """One MV's partition benefit curve (``MVGraph.partition_benefit_curves``).
+
+    ``parts`` are the MV's partition ids ranked by marginal benefit density
+    (score/size, descending); ``sizes``/``scores`` are the per-partition
+    bytes/speedup in that ranking. Pinning the first ``j`` entries is the
+    MV's "top-j column": ``sum(sizes[:j])`` catalog bytes buying
+    ``sum(scores[:j])`` speedup, with non-increasing marginal density in
+    ``j`` — the concavity the greedy outer knapsack relies on.
+    """
+
+    node: int
+    parts: tuple[int, ...]
+    sizes: tuple[float, ...]
+    scores: tuple[float, ...]
 
 
 def normalize_shares(
@@ -282,6 +366,8 @@ def from_parent_lists(
     scores: Sequence[float],
     names: Sequence[str] = (),
 ) -> MVGraph:
+    """Build an ``MVGraph`` from per-node parent lists (the shape workload
+    definitions naturally carry) instead of an explicit edge list."""
     n = len(sizes)
     if isinstance(parents, Mapping):
         plist = [tuple(parents.get(i, ())) for i in range(n)]

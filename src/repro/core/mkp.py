@@ -168,36 +168,43 @@ def branch_and_bound_mkp(
                     frac_done = True  # constraint full; later in-c items add 0
         return min(ub, generic)
 
-    def dfs(k: int, cur: int, chosen: list[int], caps_now: list[float]):
-        nonlocal best_val, best_set, expansions, exhausted
-        if exhausted:
-            return
+    # Explicit-stack DFS (include branch explored first, matching the
+    # recursive formulation bitwise): partition-expanded graphs can have
+    # thousands of items, far past CPython's recursion limit. "undo" frames
+    # restore the capacity/chosen mutations when an include subtree is done.
+    chosen: list[int] = []
+    stack: list[tuple] = [("visit", 0, 0)]
+    while stack:
+        frame = stack.pop()
+        if frame[0] == "undo":
+            i = frame[1]
+            chosen.pop()
+            for ci in item_cons[i]:
+                caps[ci] += weights[i]
+            continue
+        _, k, cur = frame
         expansions += 1
         if expansions > max_expansions:
             exhausted = True
-            return
+            break  # best_val/best_set already hold the incumbent
         if cur > best_val:
             best_val = cur
             best_set = list(chosen)
         if k >= len(order):
-            return
-        if bound(k, cur, caps_now) <= best_val:
-            return
+            continue
+        if bound(k, cur, caps) <= best_val:
+            continue
         i = order[k]
         w = weights[i]
-        # include branch
-        if all(caps_now[ci] >= w - 1e-9 for ci in item_cons[i]):
+        # LIFO: push the exclude branch first so the include branch (and
+        # its undo) run before it, exactly like the recursive include-first
+        stack.append(("visit", k + 1, cur))
+        if all(caps[ci] >= w - 1e-9 for ci in item_cons[i]):
             for ci in item_cons[i]:
-                caps_now[ci] -= w
+                caps[ci] -= w
             chosen.append(i)
-            dfs(k + 1, cur + iprof[i], chosen, caps_now)
-            chosen.pop()
-            for ci in item_cons[i]:
-                caps_now[ci] += w
-        # exclude branch
-        dfs(k + 1, cur, chosen, caps_now)
-
-    dfs(0, 0, [], caps)
+            stack.append(("undo", i))
+            stack.append(("visit", k + 1, cur + iprof[i]))
     chosen = frozenset(best_set)
     return MKPResult(
         chosen=chosen,
@@ -318,6 +325,71 @@ def ratio_select(
         key=lambda i: -(graph.scores[i] / max(graph.sizes[i], 1e-12)),
     )
     return _flag_incrementally(graph, budget, order, cand, n_workers, max_entry_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical planning: the outer knapsack over per-MV partition columns
+# ---------------------------------------------------------------------------
+
+def greedy_column_select(
+    curves: Sequence,
+    budget: float,
+    windows: Sequence[Sequence[tuple[int, int]]],
+    n_steps: int,
+    max_entry_bytes: float | None = None,
+) -> list[list[int]]:
+    """Select one partition column per MV under windowed residency budgets.
+
+    The outer knapsack of the hierarchical partitioned planner (DESIGN.md
+    §8). ``curves`` are per-MV ``BenefitCurve``s (density-ranked partitions
+    with their sizes/scores); ``windows[v][p] = (enter, release)`` is the
+    residency window — in plan steps, ``n_steps`` of them — that partition
+    ``p`` of MV ``v`` would occupy if pinned under the current execution
+    order (for the partition-major orders the hierarchical planner emits,
+    these are the *exact* expanded k-worker windows of DESIGN.md §2).
+
+    Because each curve's marginal densities are non-increasing, a single
+    global density-ordered greedy scan selects a prefix of every MV's
+    ranking — i.e. one "pin-the-top-j" column per MV — the Dantzig greedy
+    for a multiple-choice knapsack with concave choice frontiers. A
+    partition that no longer fits the step profile is skipped (not frozen):
+    a later, smaller partition of the same MV may still fit, so a selection
+    is a column with at most a few density-ordered gaps.
+
+    Partitions larger than ``min(budget, max_entry_bytes)`` or with
+    non-positive score are never selected. Returns the chosen partition ids
+    per MV (subset of ``curves[v].parts``, in ranking order). The selection
+    satisfies ``profile[step] <= budget`` at every step, each pinned
+    partition charged over its own window.
+    """
+    import heapq
+
+    cap = budget if max_entry_bytes is None else min(budget, max_entry_bytes)
+    prof = [0.0] * max(n_steps, 1)
+    chosen: list[list[int]] = [[] for _ in curves]
+
+    def density(v: int, j: int) -> float:
+        return curves[v].scores[j] / max(curves[v].sizes[j], 1e-12)
+
+    heap: list[tuple[float, int, int]] = []
+    for v, c in enumerate(curves):
+        if c.parts:
+            heap.append((-density(v, 0), v, 0))
+    heapq.heapify(heap)
+    while heap:
+        _, v, j = heapq.heappop(heap)
+        c = curves[v]
+        if j + 1 < len(c.parts):
+            heapq.heappush(heap, (-density(v, j + 1), v, j + 1))
+        size, score = c.sizes[j], c.scores[j]
+        if score <= 0.0 or size > cap:
+            continue
+        lo, hi = windows[v][c.parts[j]]
+        if max(prof[lo : hi + 1], default=0.0) + size <= budget + 1e-9:
+            for k in range(lo, hi + 1):
+                prof[k] += size
+            chosen[v].append(c.parts[j])
+    return chosen
 
 
 NodeSolver = Callable[[MVGraph, float, Sequence[int]], frozenset[int]]

@@ -11,6 +11,16 @@ The cost model is bandwidth/latency based, with defaults matching the paper's
 experiment environment (519.8 MB/s disk read, 358.9 MB/s disk write, 175 µs
 read latency). Memory bandwidth defaults to a conservative DRAM figure. All
 sizes are bytes, all times seconds.
+
+Layer contract: this module is the *only* place byte counts become seconds.
+It turns structural facts (sizes, child counts, update churn) into the
+per-node speedup scores and update-round byte/compute profiles that the
+planner (``core.altopt``), the simulator, and the per-round scenario
+drivers consume — it never looks at real data, so the same scores are valid
+for both the discrete-event and the real-executor backends. Scoring a graph
+(``score_graph`` / ``rescore`` / ``score_partitioned_graph``) must be
+deterministic in its inputs: plans, and therefore stored bytes, depend on
+reproducible scores.
 """
 from __future__ import annotations
 
@@ -78,7 +88,13 @@ def score_graph(
     cost_model: CostModel = PAPER_COST_MODEL,
     names: Sequence[str] = (),
 ) -> MVGraph:
-    """Build an MVGraph with speedup scores derived from the cost model."""
+    """Build an ``MVGraph`` with speedup scores derived from the cost model.
+
+    ``t_i = n_children(i) · [read_disk(s_i) − read_mem(s_i)] +
+    (1 − write_interference) · [write_disk(s_i) − write_mem(s_i)]``,
+    clamped at 0 — the seconds flagging node ``i`` saves end to end.
+    ``edges`` are ``(parent, child)`` pairs; ``sizes`` are output bytes.
+    """
     n_children = [0] * n
     for a, _ in edges:
         n_children[a] += 1
@@ -95,6 +111,9 @@ def score_graph(
 
 
 def rescore(graph: MVGraph, cost_model: CostModel) -> MVGraph:
+    """Same structure and sizes, speedup scores recomputed under
+    ``cost_model`` — use when a graph built for one storage tier is planned
+    against another (or after ``expand_partitions`` split sizes)."""
     return score_graph(graph.n, graph.edges, graph.sizes, cost_model, graph.names)
 
 

@@ -32,6 +32,19 @@ keys, deleted keys, updated match payloads — takes the runtime *partial
 fallback*: only the affected surviving old-left rows are re-joined and
 spliced back by rid (``join_fallbacks`` counts those rounds), instead of
 the whole-node recompute of the insert-only model.
+
+Layer contract: (1) **bitwise equivalence** — a scenario's stored MVs
+after any round are identical bytes under incremental and full refresh
+(``verify_scenario_equivalence``); optimization decisions (plans, flags,
+skips, consolidation) may change *when* and *from where* bytes move,
+never their values. (2) **budget feasibility per round** — each round's
+plan, whether from the default flat solve or an injected ``solve_fn``
+(the partition layer's hierarchical planner), must fit the catalog budget
+under every interleaving of the engine's ``n_compute_workers``; the
+engine's atomic admission enforces the bound even against stale size
+estimates. (3) **durability** — a round ends only when every refreshed MV
+is durable on the store (the paper's SLA), so crash-resume never needs
+catalog state.
 """
 from __future__ import annotations
 
@@ -381,6 +394,7 @@ def run_scenario(
     optimize: bool = True,
     static_fn=None,
     consolidate_ratio: float | None = None,
+    solve_fn=None,
 ) -> ScenarioReport:
     """Execute a multi-round refresh scenario on real data.
 
@@ -396,7 +410,13 @@ def run_scenario(
     correction-cost term is calibrated per round from the engine's observed
     partial-fallback rates (``RoundReport.fallback_stats``), and
     ``consolidate_ratio`` arms the tombstone consolidation scheduler
-    (``IncrementalEngine._finalize_run``)."""
+    (``IncrementalEngine._finalize_run``).
+
+    ``solve_fn(graph, budget, n_workers) -> Plan`` overrides the per-round
+    planner (it must return a plan feasible at ``n_workers``); the
+    partition layer passes the hierarchical partitioned solver here so
+    high-P scenarios keep per-round planning off the critical path
+    (DESIGN.md §8). Default: the flat ``altopt.solve``."""
     stale = {n.name for n in workload.nodes} & set(store.manifest())
     if stale:
         raise ValueError(
@@ -433,11 +453,12 @@ def run_scenario(
                 workload, spec, 1, sizes=sizes, fallback_rate=rate_used
             )
         g = view.to_graph(cost_model)
-        plan = (
-            solve(g, budget=budget_bytes, n_workers=n_compute_workers)
-            if optimize
-            else serial_plan(g)
-        )
+        if not optimize:
+            plan = serial_plan(g)
+        elif solve_fn is not None:
+            plan = solve_fn(g, budget_bytes, n_compute_workers)
+        else:
+            plan = solve(g, budget=budget_bytes, n_workers=n_compute_workers)
         statuses = view.meta.get("update", {}).get("statuses", ())
         static = frozenset(i for i, s in enumerate(statuses) if s == STATIC)
         if static_fn is not None:
@@ -527,6 +548,7 @@ def simulate_scenario(
     method: str = "sc",
     n_workers: int = 1,
     n_writers: int | None = None,
+    solve_fn=None,
 ) -> SimScenarioReport:
     """Discrete-event multi-round refresh (paper-scale full-vs-incremental).
 
@@ -536,7 +558,11 @@ def simulate_scenario(
     forward round to round — each refresh view is evaluated one round ahead
     of the previous round's modeled full sizes, exactly how the real
     ``run_scenario`` re-sizes each round from the store manifest — instead
-    of compounding the analytic growth model from round 0."""
+    of compounding the analytic growth model from round 0.
+
+    ``solve_fn(graph, budget, n_workers) -> Plan`` overrides the per-round
+    ``method="sc"`` planner, as in ``run_scenario`` — the hook the partition
+    layer uses for hierarchical planning at high P (DESIGN.md §8)."""
     rounds: list[SimRoundReport] = []
     sizes = [float(n.size) for n in workload.nodes]
     for r in range(spec.n_rounds + 1):
@@ -548,7 +574,12 @@ def simulate_scenario(
         if method == "serial":
             plan, mode = serial_plan(g), "serial"
         elif method == "sc":
-            plan, mode = solve(g, budget=budget_bytes, n_workers=n_workers), "sc"
+            plan = (
+                solve_fn(g, budget_bytes, n_workers)
+                if solve_fn is not None
+                else solve(g, budget=budget_bytes, n_workers=n_workers)
+            )
+            mode = "sc"
         else:
             raise ValueError(f"unknown method {method!r}")
         sim = simulate_events(

@@ -35,6 +35,17 @@ one (the row order every rid-carrying full recompute produces), else by
 ``key`` (AGG outputs and their descendants are key-ordered with unique
 keys; key-only tables have no payload beyond the key) — so
 ``concat_partitions(partitioned outputs) == unpartitioned output`` bitwise.
+
+Layer contract: partitioning changes *where bytes live and when they are
+refreshed*, never *what is computed* — every partitioned scenario's
+reassembled output must be bitwise identical to the unpartitioned full
+recompute (``verify_partitioned_equivalence``), every per-round plan must
+stay budget-feasible under every k-worker interleaving (inherited from
+``core.altopt``'s plan contract over the expanded graph), and ``P=1`` must
+be byte-for-byte the whole-MV system in planning, storage, and execution.
+Per-round planning at high P goes through ``hierarchical_round_solver``
+(DESIGN.md §8) so those guarantees hold without putting an O(n·P)-item
+MKP on the refresh critical path.
 """
 from __future__ import annotations
 
@@ -58,6 +69,7 @@ __all__ = [
     "canonical_order",
     "PartitionMap",
     "partition_workload",
+    "hierarchical_round_solver",
     "expand_update_spec",
     "partition_static_fn",
     "run_partitioned_scenario",
@@ -351,6 +363,29 @@ class PartitionedScenarioReport:
         return self.report.rounds
 
 
+def hierarchical_round_solver(n_partitions: int, **hier_kw):
+    """Per-round planner hook solving at partition granularity with the
+    hierarchical decomposition (DESIGN.md §8).
+
+    Returns a ``solve_fn(graph, budget, n_workers) -> Plan`` suitable for
+    ``run_scenario``/``simulate_scenario``: the round's view graph is
+    already the P-way expansion (one node per ``(mv, partition)``), so
+    ``core.altopt.hierarchical_plan`` runs directly on it — per-MV benefit
+    curves, greedy column selection plus per-slice exact MKPs, partition-
+    major order. Small rounds (``n·P`` at or below the flat threshold, and
+    always ``P=1``) fall back to the flat exact solve, bitwise identical to
+    the default planner. ``hier_kw`` forwards to ``hierarchical_plan``
+    (``max_entry_bytes``, ``order_solver``, ``flat_threshold``, ...)."""
+    from ..core.altopt import hierarchical_plan
+
+    def solve_fn(graph, budget, n_workers):
+        return hierarchical_plan(
+            graph, budget, n_partitions, n_workers=n_workers, **hier_kw
+        )
+
+    return solve_fn
+
+
 def run_partitioned_scenario(
     workload: Workload,
     n_partitions: int,
@@ -359,6 +394,7 @@ def run_partitioned_scenario(
     spec: UpdateSpec,
     cost_model: CostModel,
     shares: Sequence[float] | None = None,
+    planner: str = "auto",
     **run_kw,
 ) -> PartitionedScenarioReport:
     """Execute a multi-round refresh scenario at partition granularity.
@@ -369,10 +405,25 @@ def run_partitioned_scenario(
     dispatches ``(mv, partition)`` tasks data-parallel across the engine's
     workers, storage holds per-partition part-file groups, and clean
     partitions are pruned per round. ``P=1`` is byte-for-byte the
-    unpartitioned scenario."""
+    unpartitioned scenario.
+
+    ``planner`` picks the per-round solver: ``"auto"`` (the default) uses
+    the hierarchical partitioned planner, which itself falls back to the
+    flat exact solve below the ``n·P`` threshold — so small scenarios stay
+    bitwise identical to ``planner="flat"`` while high-P rounds plan in
+    milliseconds; ``"flat"`` forces the flat ``altopt.solve`` every round;
+    ``"hierarchical"`` forces the decomposition even on small rounds."""
     from .incremental import run_scenario
 
     pwl, pmap = partition_workload(workload, n_partitions, shares)
+    if planner == "flat":
+        solve_fn = None
+    elif planner == "auto":
+        solve_fn = hierarchical_round_solver(pmap.n_partitions)
+    elif planner == "hierarchical":
+        solve_fn = hierarchical_round_solver(pmap.n_partitions, flat_threshold=0)
+    else:
+        raise ValueError(f"unknown planner {planner!r}")
     rep = run_scenario(
         pwl,
         store,
@@ -380,6 +431,7 @@ def run_partitioned_scenario(
         expand_update_spec(spec, pmap),
         cost_model,
         static_fn=partition_static_fn(workload, pwl, pmap, spec),
+        solve_fn=solve_fn,
         **run_kw,
     )
     return PartitionedScenarioReport(report=rep, workload=pwl, pmap=pmap)

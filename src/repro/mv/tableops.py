@@ -92,9 +92,21 @@ def make_base_table(
     seed: int,
     key_mod: int | None = None,
     rid_base: int | None = None,
+    key_probs: np.ndarray | None = None,
 ) -> Table:
+    """Deterministic synthetic base table: an int64 ``key`` column, ``rid``
+    row ids when ``rid_base`` is given, and ``n_cols - 1`` float32 value
+    columns. Keys draw uniformly from ``[0, key_mod)`` unless ``key_probs``
+    supplies an explicit per-key distribution (len == key range) — the hook
+    ``realize_workload`` uses for Zipf-skewed key populations, which hash
+    into uneven partition sizes downstream."""
     rng = np.random.default_rng(seed)
-    t: Table = {"key": rng.integers(0, key_mod or max(n_rows // 4, 4), n_rows).astype(np.int64)}
+    kmod = key_mod or max(n_rows // 4, 4)
+    if key_probs is not None:
+        keys = rng.choice(len(key_probs), size=n_rows, p=key_probs)
+        t: Table = {"key": keys.astype(np.int64)}
+    else:
+        t = {"key": rng.integers(0, kmod, n_rows).astype(np.int64)}
     if rid_base is not None:
         t["rid"] = rid_base + np.arange(n_rows, dtype=np.int64)
     for c in range(n_cols - 1):

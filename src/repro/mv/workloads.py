@@ -507,9 +507,31 @@ def _anchor(workloads: list[Workload], target_s: float,
 # Real (executable) workloads for the Controller — small scale, real tables
 # ---------------------------------------------------------------------------
 
+def zipf_key_probs(
+    n_keys: int, skew: float, seed: int = 0
+) -> "np.ndarray | None":
+    """Zipf(``skew``) probability vector over ``n_keys`` key ids,
+    deterministically shuffled by ``seed`` so the hot keys are scattered
+    across the id space (``skew <= 0`` → ``None``: uniform draws).
+
+    This is the *data-side* counterpart of the modeled
+    ``core.speedup.partition_shares``: feeding it to ``make_base_table``
+    concentrates real rows on few keys, and because partitioning hashes by
+    key, the partitions those hot keys land in carry most of the bytes —
+    the real executor then exercises the same uneven partition sizes the
+    planner's share vectors model."""
+    if skew <= 0.0:
+        return None
+    w = np.arange(1, n_keys + 1, dtype=np.float64) ** -float(skew)
+    rng = np.random.default_rng(seed)
+    rng.shuffle(w)
+    return w / w.sum()
+
+
 def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
                      n_cols: int = 4, seed: int = 0,
-                     key_mod: int | None = None) -> Workload:
+                     key_mod: int | None = None,
+                     key_skew: float = 0.0) -> Workload:
     """Attach real compute fns + actual base tables. Root sizes are rescaled
     to ``bytes_per_root`` so tests/benches run in seconds; a calibration pass
     (the paper's 'metrics from previous runs') then measures true output
@@ -526,11 +548,18 @@ def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
     bare retractions. ``key_mod`` overrides the join-key range: small values
     saturate the key space (right-side deltas carry no new keys, the pure
     JOIN delta rule applies), huge values force the partial-fallback path.
+
+    ``key_skew > 0`` draws every key — initial loads, inserted rows, and
+    UPDATE redraws alike — from a Zipf(``key_skew``) distribution over the
+    key range (``zipf_key_probs``) instead of uniformly, so hash-partitioned
+    runs see genuinely uneven partition sizes on the *real* executor, not
+    just in the simulator's modeled share vectors.
     """
     from . import tableops as T
 
     rows = max(64, bytes_per_root // (8 * n_cols))
     kmod = key_mod or max(rows // 4, 4)
+    key_probs = zipf_key_probs(kmod, key_skew, seed=seed)
 
     def make_delta_fn(i: int):
         def base_seed(j: int) -> int:
@@ -539,7 +568,7 @@ def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
         def initial_load() -> "dict":
             return T.make_base_table(
                 rows, n_cols, seed=base_seed(0), key_mod=kmod,
-                rid_base=T.make_rid_base(0, i),
+                rid_base=T.make_rid_base(0, i), key_probs=key_probs,
             )
 
         def delta_from_live(live: "dict", round_idx: int, ingest: float,
@@ -561,7 +590,11 @@ def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
                 upd_rows: dict = {}
                 for col in live:
                     if col == "key":
-                        upd_rows[col] = rng.integers(0, kmod, n_upd).astype(np.int64)
+                        upd_rows[col] = (
+                            rng.choice(kmod, size=n_upd, p=key_probs)
+                            if key_probs is not None
+                            else rng.integers(0, kmod, n_upd)
+                        ).astype(np.int64)
                     elif col == "rid":
                         upd_rows[col] = np.asarray(live["rid"])[upd_idx]
                     else:
@@ -572,6 +605,7 @@ def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
                 parts.append(T.make_base_table(
                     n_ins, n_cols, seed=base_seed(round_idx), key_mod=kmod,
                     rid_base=T.make_rid_base(round_idx, i),
+                    key_probs=key_probs,
                 ))
             if not parts:
                 return T.empty_like(T.table_schema(live))
@@ -653,4 +687,7 @@ def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
         )
         for i, n in enumerate(workload.nodes)
     ]
-    return Workload(name=workload.name + "_real", nodes=nodes, meta=dict(workload.meta))
+    meta = dict(workload.meta)
+    if key_skew > 0.0:
+        meta["key_skew"] = key_skew
+    return Workload(name=workload.name + "_real", nodes=nodes, meta=meta)

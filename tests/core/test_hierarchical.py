@@ -1,0 +1,184 @@
+"""Hierarchical partitioned planner (DESIGN.md §8): exact-fallback
+equivalence, solve-time scaling, and budget feasibility.
+
+* small instances (``n·P`` at or below the flat threshold, and always
+  ``P = 1``) return bitwise the flat ``solve_partitioned`` plan;
+* the forced decomposition stays close to the flat objective on the skewed
+  hot-MV instance and orders of magnitude faster at ``P = 64``;
+* every hierarchical plan — over random DAGs, skews, budgets, and worker
+  counts — fits the budget under the expanded graph's exact k-worker
+  windowed residency accounting.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    FLAT_THRESHOLD,
+    MVGraph,
+    hierarchical_plan,
+    solve,
+    solve_hierarchical,
+    solve_partitioned,
+)
+from repro.core.speedup import (
+    EFFECTIVE_NFS_COST_MODEL,
+    partition_shares,
+    rescore,
+)
+from repro.mv import generate_workload
+
+CM = EFFECTIVE_NFS_COST_MODEL
+
+
+def skewed_instance(n_nodes=20, seed=31):
+    """The exact instance the planner-scale benchmark sweeps (same hot-MV
+    construction — reused from the benchmark so the CI-asserted numbers
+    and these tests always validate the same shape)."""
+    from benchmarks.partition_sweep import skewed_workload
+
+    wl, _hot, budget = skewed_workload(seed=seed, n_nodes=n_nodes)
+    return wl.to_graph(CM), budget
+
+
+def test_p1_is_bitwise_the_whole_mv_solve():
+    g, budget = skewed_instance()
+    for k in (1, 4):
+        ref = solve(g, budget, n_workers=k)
+        hier = solve_hierarchical(g, budget, 1, n_workers=k)
+        assert hier.n_partitions == 1
+        assert hier.plan.order == ref.order
+        assert hier.plan.flagged == ref.flagged
+        assert hier.plan.score == ref.score
+
+
+def test_small_np_falls_back_to_flat_exactly():
+    g, budget = skewed_instance(n_nodes=12)
+    P = 8
+    assert g.n * P <= FLAT_THRESHOLD
+    shares = partition_shares(P, skew=1.1, seed=7)
+    flat = solve_partitioned(g, budget, P, cost_model=CM, shares=shares)
+    hier = solve_hierarchical(g, budget, P, cost_model=CM, shares=shares)
+    assert hier.plan.order == flat.plan.order
+    assert hier.plan.flagged == flat.plan.flagged
+    assert hier.index == flat.index
+
+
+def test_forced_hierarchical_matches_exact_objective_on_small_instance():
+    """Equivalence at small n·P: with the fallback disabled, the
+    decomposition's objective matches (or exceeds — the flat BnB is budget-
+    capped) the exact flat solve within a few percent."""
+    g, budget = skewed_instance(n_nodes=12)
+    for P in (4, 8):
+        shares = partition_shares(P, skew=1.1, seed=7)
+        flat = solve_partitioned(g, budget, P, cost_model=CM, shares=shares)
+        hier = solve_hierarchical(
+            g, budget, P, cost_model=CM, shares=shares, flat_threshold=0
+        )
+        assert hier.plan.score >= 0.95 * flat.plan.score, (
+            f"P={P}: hierarchical {hier.plan.score:.2f} vs "
+            f"flat {flat.plan.score:.2f}"
+        )
+
+
+def test_solve_time_regression_guard_at_p64():
+    """The point of the decomposition: planning at P=64 must stay orders of
+    magnitude below the flat path (which takes ~15s on this instance). The
+    absolute bound is generous for slow CI hosts while still catching any
+    regression back to an O(n·P)-item MKP."""
+    g, budget = skewed_instance()
+    shares = partition_shares(64, skew=1.1, seed=7)
+    hier = solve_hierarchical(g, budget, 64, cost_model=CM, shares=shares)
+    assert hier.plan.solve_seconds < 2.0, (
+        f"hierarchical solve took {hier.plan.solve_seconds:.2f}s at P=64"
+    )
+    assert hier.plan.score > 0.0
+    assert len(hier.plan.flagged) > 0
+
+
+def test_partition_major_order_is_topological_and_plan_reports_peak():
+    g, budget = skewed_instance()
+    shares = partition_shares(32, skew=1.1, seed=7)
+    hier = solve_hierarchical(g, budget, 32, cost_model=CM, shares=shares)
+    expanded, _ = g.expand_partitions(32, shares)
+    expanded = rescore(expanded, CM)
+    assert expanded.is_topological(list(hier.plan.order))
+    assert hier.plan.peak_memory <= budget + 1e-9
+    assert hier.plan.score == pytest.approx(
+        expanded.total_score(hier.plan.flagged)
+    )
+
+
+def test_benefit_curves_are_density_ranked_prefixes():
+    g, budget = skewed_instance(n_nodes=10)
+    P = 4
+    shares = partition_shares(P, skew=1.2, seed=3)
+    expanded, index = g.expand_partitions(P, shares)
+    expanded = rescore(expanded, CM)
+    curves = expanded.partition_benefit_curves(P)
+    assert len(curves) == g.n
+    for v, c in enumerate(curves):
+        assert c.node == v
+        assert sorted(c.parts) == list(range(P))
+        dens = [
+            s / max(z, 1e-12) for s, z in zip(c.scores, c.sizes)
+        ]
+        assert all(a >= b - 1e-12 for a, b in zip(dens, dens[1:])), (
+            f"curve of v{v} not density-sorted"
+        )
+        # curve entries are exactly the expanded nodes of v
+        for j, p in enumerate(c.parts):
+            assert c.sizes[j] == expanded.sizes[v * P + p]
+            assert c.scores[j] == expanded.scores[v * P + p]
+
+
+def test_unsupported_solve_kw_raises_instead_of_silently_dropping():
+    """A kwarg only the flat path understands must fail loudly: honoring it
+    below the threshold but ignoring it above would make the same call plan
+    differently with instance size."""
+    g, budget = skewed_instance(n_nodes=10)
+    with pytest.raises(TypeError, match="node_solver"):
+        solve_hierarchical(g, budget, 4, node_solver="greedy")
+
+
+def test_rejects_non_expanded_layouts():
+    g, budget = skewed_instance(n_nodes=10)
+    with pytest.raises(ValueError):
+        g.partition_benefit_curves(3)  # 10 % 3 != 0
+    with pytest.raises(ValueError):
+        hierarchical_plan(g, budget, 3)
+    # a cross-partition edge violates the co-partitioned layout
+    bad = MVGraph(4, ((0, 3),), (1.0,) * 4, (1.0,) * 4)
+    with pytest.raises(ValueError):
+        hierarchical_plan(bad, 10.0, 2, flat_threshold=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_hierarchical_plans_always_budget_feasible(data):
+    """Hypothesis sweep: over random DAGs × P × skew × budget × workers the
+    forced decomposition always returns a plan that fits the budget under
+    the expanded graph's exact k-worker windowed residency accounting."""
+    seed = data.draw(st.integers(0, 10_000))
+    n = data.draw(st.integers(4, 12))
+    P = data.draw(st.sampled_from([2, 4, 8, 16]))
+    k = data.draw(st.sampled_from([1, 2, 4]))
+    skew = data.draw(st.sampled_from([0.0, 0.8, 1.5]))
+    frac = data.draw(st.floats(0.01, 0.6))
+    wl = generate_workload(n, seed=seed)
+    g = wl.to_graph(CM)
+    budget = sum(g.sizes) * frac
+    shares = partition_shares(P, skew=skew, seed=seed)
+    hier = solve_hierarchical(
+        g, budget, P, cost_model=CM, shares=shares, n_workers=k,
+        flat_threshold=0,
+    )
+    expanded, _ = g.expand_partitions(P, shares)
+    expanded = rescore(expanded, CM)
+    assert expanded.is_topological(list(hier.plan.order))
+    assert expanded.is_feasible(
+        hier.plan.flagged, hier.plan.order, budget, k
+    ), f"seed={seed} n={n} P={P} k={k}"
+    # flagged partitions map back to valid (node, partition) pairs
+    for v, p in hier.flagged_partitions:
+        assert 0 <= v < g.n and 0 <= p < P

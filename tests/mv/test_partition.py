@@ -388,6 +388,86 @@ def test_scenario_matrix_partitioned_bitwise_vs_full_recompute(seed):
         shutil.rmtree(tmp_path, ignore_errors=True)
 
 
+def test_hierarchical_round_planner_bitwise_and_feasible(tmp_path):
+    """The per-round hierarchical solver (``planner="hierarchical"``, forced
+    below the flat threshold) must leave the refresh output bitwise
+    identical to the unpartitioned full recompute — plans change which
+    partitions are pinned, never what is computed — and every round's plan
+    must stay budget-feasible at the engine's worker count."""
+    wl = realize_workload(
+        generate_workload(8, seed=7), bytes_per_root=1 << 12, key_skew=1.2,
+        seed=7,
+    )
+    budget = sum(n.size for n in wl.nodes) * 0.4
+    spec_kw = dict(ingest_frac=0.15, update_frac=0.1, delete_frac=0.05,
+                   n_rounds=2)
+    ref = DiskStore(tmp_path / "ref")
+    run_scenario(wl, ref, budget, UpdateSpec(mode="full", **spec_kw), CM)
+    for P, k in ((4, 1), (8, 2)):
+        store = DiskStore(tmp_path / f"h_p{P}k{k}")
+        rep = run_partitioned_scenario(
+            wl, P, store, budget, UpdateSpec(mode="incremental", **spec_kw),
+            CM, n_compute_workers=k, planner="hierarchical",
+        )
+        verify_partitioned_equivalence(wl, store, P, ref)
+        for r in rep.rounds:
+            assert r.plan.n_workers == k
+            assert r.run.peak_catalog_bytes <= budget + 1e-9, (P, k, r.round_idx)
+        # the solver actually engaged partition granularity somewhere
+        assert any(
+            "@p" in rep.workload.nodes[v].name
+            for r in rep.rounds for v in r.plan.flagged
+        )
+
+
+def test_hierarchical_auto_planner_matches_flat_on_small_rounds(tmp_path):
+    """``planner="auto"`` falls back to the flat exact solve below the n·P
+    threshold, so small scenarios produce the identical plans (and bytes)
+    as ``planner="flat"``."""
+    wl = realize_workload(generate_workload(6, seed=21), bytes_per_root=1 << 12)
+    budget = sum(n.size for n in wl.nodes) * 0.4
+    spec = UpdateSpec(mode="incremental", ingest_frac=0.2, n_rounds=1)
+    reps = {}
+    for planner in ("auto", "flat"):
+        store = DiskStore(tmp_path / planner)
+        reps[planner] = run_partitioned_scenario(
+            wl, 4, store, budget, spec, CM, planner=planner
+        )
+    for ra, rf in zip(reps["auto"].rounds, reps["flat"].rounds):
+        assert ra.plan.order == rf.plan.order
+        assert ra.plan.flagged == rf.plan.flagged
+
+
+def test_skewed_keys_give_uneven_partitions_on_real_executor(tmp_path):
+    """``realize_workload(key_skew=...)``: the real executor's partition
+    sizes follow the Zipf key population — hot partitions carry a
+    multiple of the cold ones — and the skewed scenario still refreshes
+    bitwise-identically to the unpartitioned full recompute."""
+    P = 8
+    wl = realize_workload(
+        generate_workload(6, seed=17), bytes_per_root=1 << 13, seed=17,
+        key_skew=1.3,
+    )
+    scan = next(n for n in wl.nodes if not n.parents)
+    rows = [len(p["key"]) for p in partition_table(scan.delta_fn(0, 0.1), P)]
+    assert max(rows) >= 3 * max(min(rows), 1), f"no skew: {rows}"
+    budget = sum(n.size for n in wl.nodes) * 0.4
+    spec_kw = dict(ingest_frac=0.2, n_rounds=2)
+    ref = DiskStore(tmp_path / "ref")
+    run_scenario(wl, ref, budget, UpdateSpec(mode="full", **spec_kw), CM)
+    store = DiskStore(tmp_path / "skew")
+    rep = run_partitioned_scenario(
+        wl, P, store, budget, UpdateSpec(mode="incremental", **spec_kw), CM
+    )
+    verify_partitioned_equivalence(wl, store, P, ref)
+    # stored partition groups are genuinely uneven
+    sizes = [
+        store.manifest().get(partition_entry_name(scan.name, p), 0.0)
+        for p in range(P)
+    ]
+    assert max(sizes) >= 2.5 * max(min(sizes), 1.0), sizes
+
+
 def test_clean_partitions_are_pruned_per_round(tmp_path):
     """Dirty-partition pruning: with P=8 and a small per-round delta, the
     partitions whose keys receive no rows are skipped (never dispatched)

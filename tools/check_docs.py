@@ -1,0 +1,75 @@
+"""Intra-repo link checker for the documentation (CI docs job).
+
+    python tools/check_docs.py README.md DESIGN.md
+
+Validates every markdown link target and every backtick-quoted repo path
+in the given files:
+
+* ``[text](target)`` links — external schemes (http/https/mailto) are
+  skipped; pure in-page anchors (``#...``) are skipped; everything else is
+  resolved relative to the repo root and must exist (an optional
+  ``#fragment`` is stripped first).
+* `` `path/to/file.py` `` backtick references that *look like* repo paths
+  (contain a ``/`` and end in a known source/doc extension) must exist —
+  this is what catches docs drifting behind file renames.
+
+Exits non-zero listing every broken reference.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TICK_RE = re.compile(r"`([^`\s]+)`")
+PATH_SUFFIXES = (".py", ".md", ".yml", ".yaml", ".toml", ".json", ".txt")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def check_file(md: Path) -> list[str]:
+    text = md.read_text()
+    errors: list[str] = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (REPO / path).exists():
+                errors.append(f"{md.name}:{lineno}: broken link -> {target}")
+        for ref in TICK_RE.findall(line):
+            # a backtick span is treated as a repo path only when it is
+            # unambiguous about it: has a directory part and a source/doc
+            # suffix (``mv/engine.py``); bare module or symbol names and
+            # code snippets are not path claims
+            base = ref.split("#", 1)[0].split("::", 1)[0]
+            if "/" not in base or not base.endswith(PATH_SUFFIXES):
+                continue
+            if any(c in base for c in "()*{}$<>="):
+                continue
+            if not (REPO / base).exists():
+                errors.append(f"{md.name}:{lineno}: missing path -> {ref}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] or [REPO / "README.md", REPO / "DESIGN.md"]
+    all_errors: list[str] = []
+    for md in files:
+        if not md.exists():
+            all_errors.append(f"{md}: file not found")
+            continue
+        all_errors.extend(check_file(md))
+    if all_errors:
+        print("\n".join(all_errors))
+        print(f"\n{len(all_errors)} broken doc reference(s)")
+        return 1
+    print(f"docs OK: {', '.join(m.name for m in files)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
