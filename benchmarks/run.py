@@ -2,47 +2,70 @@
 
 Runs every paper-figure benchmark (Figs. 9–14, Tables IV–V), the
 full-vs-incremental update comparison, the real-executor wall-clock
-validation, and the roofline report from whatever dry-run records exist.
-``--quick`` trims sweep sizes; ``--smoke`` runs only the fast
-scenario-regression subset (the incremental benchmark, in quick mode) for
-CI. Exit code is non-zero if any module raises."""
+validation, the operator-throughput microbenchmark, and the roofline report
+from whatever dry-run records exist. ``--quick`` trims sweep sizes;
+``--smoke`` runs only the fast scenario-regression subset (the incremental
+benchmark in quick mode, plus the data-plane parity gate) for CI. Exit code
+is non-zero if any module raises.
+
+Host-parallel JAX data plane
+----------------------------
+``--hostdev N`` sets ``--xla_force_host_platform_device_count=N`` *before*
+any benchmark module imports JAX, so the CPU backend exposes N devices and
+the jitted data plane can be measured host-parallel (benchmark imports are
+deferred into ``main`` for exactly this reason — XLA reads the flag once at
+backend init). For stable large-allocation behavior pair it with tcmalloc,
+the recipe the HomebrewNLP runs use:
+
+    LD_PRELOAD=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \\
+    TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000 \\
+    PYTHONPATH=src python -m benchmarks.run --hostdev 8 --only tableops
+"""
 from __future__ import annotations
 
 import argparse
+import os
 import time
 import traceback
 
-from . import (
-    fig9_end_to_end,
-    fig10_scales,
-    fig12_ablation,
-    fig13_opttime,
-    fig14_sweep,
-    incremental,
-    parallel_sweep,
-    partition_sweep,
-    planner_scale,
-    real_executor,
-    roofline,
-    table4_readtime,
-    table5_cluster,
-)
 
-MODULES = [
-    ("fig9_end_to_end", fig9_end_to_end.run),
-    ("fig10_scales", fig10_scales.run),
-    ("fig11_memcat+table4", table4_readtime.run),   # table4 drives fig11
-    ("fig12_ablation", fig12_ablation.run),
-    ("table5_cluster", table5_cluster.run),
-    ("parallel_sweep", parallel_sweep.run),
-    ("partition_sweep", partition_sweep.run),
-    ("planner_scale", planner_scale.run),
-    ("incremental", incremental.run),
-    ("fig13_opttime", fig13_opttime.run),
-    ("fig14_sweep", fig14_sweep.run),
-    ("real_executor", real_executor.run),
-    ("roofline", lambda quick: roofline.run(mesh="single", quick=quick)),
-]
+def _modules():
+    """Import benchmark modules and build the registry. Deferred so
+    ``--hostdev`` can set XLA_FLAGS before anything pulls in JAX."""
+    from . import (
+        fig9_end_to_end,
+        fig10_scales,
+        fig12_ablation,
+        fig13_opttime,
+        fig14_sweep,
+        incremental,
+        parallel_sweep,
+        partition_sweep,
+        planner_scale,
+        real_executor,
+        roofline,
+        table4_readtime,
+        table5_cluster,
+        tableops_bench,
+    )
+
+    return [
+        ("fig9_end_to_end", fig9_end_to_end.run),
+        ("fig10_scales", fig10_scales.run),
+        ("fig11_memcat+table4", table4_readtime.run),  # table4 drives fig11
+        ("fig12_ablation", fig12_ablation.run),
+        ("table5_cluster", table5_cluster.run),
+        ("parallel_sweep", parallel_sweep.run),
+        ("partition_sweep", partition_sweep.run),
+        ("planner_scale", planner_scale.run),
+        ("incremental", incremental.run),
+        ("fig13_opttime", fig13_opttime.run),
+        ("fig14_sweep", fig14_sweep.run),
+        ("real_executor", real_executor.run),
+        ("tableops_bench", tableops_bench.run),
+        ("roofline", lambda quick: roofline.run(mesh="single", quick=quick)),
+    ]
+
 
 # scenario-regression gate for CI: fast, asserts the paper-shaped invariants
 # across the INSERT / UPDATE / DELETE update kinds — for inserts, every
@@ -56,7 +79,12 @@ MODULES = [
 # planner_scale asserts the hierarchical-planner criteria: >= 10x faster
 # solves than flat at P=64, end-to-end speedup within 5% of flat across the
 # sweep, and bitwise P=1 degeneracy.
-SMOKE_MODULES = ["incremental", "partition_sweep", "planner_scale"]
+# tableops_bench (smoke mode) is the data-plane parity gate: every ported
+# operator must be bitwise-equal across numpy / jitted-XLA / interpret-mode
+# Pallas, asserted in-run (DESIGN.md §9).
+SMOKE_MODULES = [
+    "incremental", "partition_sweep", "planner_scale", "tableops_bench",
+]
 
 
 def main(argv=None):
@@ -65,12 +93,20 @@ def main(argv=None):
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset (implies --quick)")
+    ap.add_argument("--hostdev", type=int, default=0, metavar="N",
+                    help="expose N XLA host (CPU) devices before importing "
+                         "JAX (--xla_force_host_platform_device_count)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
+    if args.hostdev > 0:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={args.hostdev}"
+        ).strip()
 
     failures = []
-    for name, fn in MODULES:
+    for name, fn in _modules():
         if args.only and args.only not in name:
             continue
         if args.smoke and name not in SMOKE_MODULES:

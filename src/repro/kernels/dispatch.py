@@ -1,0 +1,75 @@
+"""Shared implementation-dispatch state for the kernel and MV data planes.
+
+``REPRO_KERNEL_IMPL`` is read ONCE, here, at import — not on every kernel
+call (the old ``kernels/ops.py::_resolve`` re-read the environment per call,
+which made dispatch cost scale with call count and let mid-run environment
+mutation silently flip implementations between two calls of one round).
+Runtime overrides go through the explicit hook instead:
+
+* ``kernel_impl()``      — the configured process-wide impl.
+* ``set_kernel_impl(x)`` — override it (``None`` re-reads the environment);
+                           returns the previous value so callers can restore.
+* ``resolve(impl)``      — resolve a per-call ``impl="auto"`` argument
+                           against the configured impl and the backend
+                           default (pallas on TPU, xla elsewhere).
+
+Both dispatch layers — ``kernels/ops.py`` (model kernels) and
+``mv/dataplane.py`` (MV operator hot path) — resolve through this module,
+so one environment variable / one override call keeps them in agreement.
+"""
+from __future__ import annotations
+
+import os
+
+# Every impl either layer accepts. "numpy" is meaningful only to the MV data
+# plane (model kernels have no host reference); ops.py never resolves to it
+# unless explicitly asked.
+VALID_IMPLS = ("auto", "xla", "pallas", "interpret", "numpy")
+
+# Aliases accepted from the environment / callers.
+_ALIASES = {"jax": "xla", "jit": "xla"}
+
+
+def _normalize(impl: str) -> str:
+    impl = _ALIASES.get(impl.strip().lower(), impl.strip().lower())
+    if impl not in VALID_IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {impl!r}; expected one of {VALID_IMPLS}"
+        )
+    return impl
+
+
+def _read_env() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL", "")
+    return _normalize(env) if env else "auto"
+
+
+_configured: str = _read_env()
+
+
+def kernel_impl() -> str:
+    """The configured process-wide impl (environment read once at import)."""
+    return _configured
+
+
+def set_kernel_impl(impl: str | None) -> str:
+    """Override the configured impl; ``None`` re-reads the environment.
+    Returns the previous value (so a test/tool can restore it)."""
+    global _configured
+    prev = _configured
+    _configured = _read_env() if impl is None else _normalize(impl)
+    return prev
+
+
+def resolve(impl: str = "auto") -> str:
+    """Resolve a per-call ``impl`` argument: an explicit value wins, "auto"
+    defers to the configured impl, and a configured "auto" picks the backend
+    default (pallas on TPU backends, xla elsewhere)."""
+    impl = _normalize(impl)
+    if impl != "auto":
+        return impl
+    if _configured != "auto":
+        return _configured
+    import jax
+
+    return "pallas" if jax.default_backend() == "tpu" else "xla"

@@ -7,29 +7,22 @@
 * ``"pallas"``  — the Pallas TPU kernels (TARGET path on real v5e pods).
 * ``"interpret"`` — Pallas kernels under the interpreter (CPU correctness
                   validation; what the kernel tests exercise).
-* ``"auto"``    — pallas on TPU backends, xla elsewhere; override with
-                  REPRO_KERNEL_IMPL env var.
+* ``"auto"``    — pallas on TPU backends, xla elsewhere; overridden by the
+                  shared dispatch state in ``kernels/dispatch.py`` —
+                  ``REPRO_KERNEL_IMPL`` read once at import, runtime changes
+                  via ``dispatch.set_kernel_impl`` (the MV data plane in
+                  ``mv/dataplane.py`` resolves through the same state, so
+                  both layers always agree).
 """
 from __future__ import annotations
 
-import os
-from functools import partial
-
-import jax
-
+from . import dispatch
 from . import flash_attention as _fa
 from . import ref
 from . import rmsnorm as _rn
 from . import ssd_scan as _ssd
 
-
-def _resolve(impl: str) -> str:
-    if impl != "auto":
-        return impl
-    env = os.environ.get("REPRO_KERNEL_IMPL")
-    if env:
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
+_resolve = dispatch.resolve
 
 
 def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,

@@ -1,0 +1,732 @@
+"""Array-level data plane for the MV operator hot path (DESIGN.md §9).
+
+Once S/C short-circuits storage I/O, per-round wall time is dominated by the
+CPU operator inner loops in ``tableops.py``/``partition.py``. This module
+ports those loops to jitted JAX with a Pallas path, behind the same
+``impl=`` dispatch idiom as ``kernels/ops.py``:
+
+* ``numpy``     — the bitwise REFERENCE and the default: exactly the
+                  vectorized host code the operators always ran. The entire
+                  existing scenario/partition/incremental bitwise matrix
+                  executes on this path unchanged.
+* ``xla``       — jitted JAX for the arithmetic passes (splitmix64 hash,
+                  filter compare, map expression, fixed-point encode,
+                  wraparound-exact cumsum segment reduction, sorted-probe);
+                  host numpy for permutations. XLA:CPU's sorts and scatters
+                  are serial — ``jnp.argsort`` loses to numpy's radix sort
+                  by ~10x at 1e7 rows — so sorting stays on host where the
+                  operators' bitwise contract permits any stable order.
+                  ``"jax"`` is accepted as an alias.
+* ``pallas``    — Pallas kernels for the element-wise passes (hash +
+                  fused partition histogram, filter compare, the two map
+                  stages, fixed-point encode) and a vectorized binary-search
+                  probe kernel. TARGET path on real TPU pods.
+* ``interpret`` — the Pallas kernels under the interpreter (CPU correctness
+                  validation; what the parity tests exercise).
+
+Resolution order: explicit ``impl=`` argument > ``SC_DATAPLANE`` env (read
+ONCE at import; override at runtime with ``set_impl``/``use_impl``) > the
+shared ``kernels.dispatch`` configured impl (``REPRO_KERNEL_IMPL``, so the
+two dispatch layers agree) > ``numpy``.
+
+Parity contract — every primitive is bitwise-equal across impls:
+
+* the map expression runs as TWO separately-jitted kernels: XLA:CPU
+  contracts ``a*c + f(b)`` into an FMA inside one fused computation (and
+  ``lax.optimization_barrier`` does not survive fusion), which changes the
+  low bit vs numpy's unfused mul-then-add; splitting the multiply from the
+  add keeps every operation correctly rounded and batch-invariant;
+* filter compares are pinned to the column's own dtype (f32 column → f32
+  threshold, f64 → f64, ints compare against f64), so the mask is identical
+  whether or not JAX x64 is enabled and across numpy promotion changes;
+* AGG sums are int64 fixed-point: int64 addition wraps mod 2^64 identically
+  in ``np.add.at``, host ``cumsum``-diff, and XLA scans, so segment sums
+  over ANY row order inside a group are bitwise-equal — which is what lets
+  the jax path use an unstable host sort for grouping;
+* the probe pads its sorted-unique array to the next power of two with
+  int64-max sentinels (bounding jit retraces to one per size bucket); the
+  hit test gathers at the real-length-clipped position, which reproduces
+  the numpy clip semantics even when the probe value equals the sentinel.
+
+Non-numpy impls require JAX x64 (int64/uint64/float64 table columns); it is
+enabled lazily on first use and ``use_impl`` restores the prior setting.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from functools import lru_cache
+
+import numpy as np
+
+from ..kernels import dispatch as _dispatch
+
+__all__ = [
+    "configured_impl",
+    "set_impl",
+    "use_impl",
+    "resolve_impl",
+    "hash64",
+    "partition_ids",
+    "partition_index",
+    "filter_mask",
+    "map_derived",
+    "fixed_point_encode",
+    "group_reduce",
+    "first_occurrence",
+    "probe_sorted",
+    "AGG_QUANTUM",
+]
+
+# Fixed-point quantum for AGG sums (mirrors tableops.AGG_QUANTUM; defined
+# here too so the encode kernels don't import the table layer).
+AGG_QUANTUM = 2.0**16
+
+_SPLITMIX_C1 = 0xBF58476D1CE4E5B9
+_SPLITMIX_C2 = 0x94D049BB133111EB
+
+_I64MAX = np.iinfo(np.int64).max
+
+_VALID = ("numpy", "xla", "pallas", "interpret")
+_ALIASES = {"jax": "xla", "jit": "xla"}
+
+
+def _normalize(impl: str) -> str:
+    impl = _ALIASES.get(impl.strip().lower(), impl.strip().lower())
+    if impl not in _VALID + ("auto",):
+        raise ValueError(
+            f"unknown dataplane impl {impl!r}; expected one of "
+            f"{_VALID + ('auto',)} (alias 'jax' → 'xla')"
+        )
+    return impl
+
+
+def _read_env() -> str:
+    env = os.environ.get("SC_DATAPLANE", "")
+    return _normalize(env) if env else "auto"
+
+
+_configured: str = _read_env()
+
+
+def configured_impl() -> str:
+    """The configured data-plane impl ("auto" defers to kernels.dispatch,
+    then numpy). Environment is read once at import."""
+    return _configured
+
+
+def set_impl(impl: str | None) -> str:
+    """Override the configured impl; ``None`` re-reads ``SC_DATAPLANE``.
+    Returns the previous value."""
+    global _configured
+    prev = _configured
+    _configured = _read_env() if impl is None else _normalize(impl)
+    return prev
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Resolve a per-call ``impl`` argument to a concrete implementation
+    (pure query — no JAX state is touched)."""
+    impl = _normalize(impl)
+    if impl != "auto":
+        return impl
+    if _configured != "auto":
+        return _configured
+    # defer to the shared kernel dispatch so REPRO_KERNEL_IMPL moves both
+    # layers; its own "auto" means "nothing configured" → numpy reference
+    shared = _dispatch.kernel_impl()
+    if shared != "auto":
+        return shared
+    return "numpy"
+
+
+def _active_impl(impl: str) -> str:
+    """Resolution used by the primitives: like ``resolve_impl`` but enables
+    JAX x64 (int64/uint64/float64 columns) when a jitted impl is selected."""
+    impl = resolve_impl(impl)
+    if impl != "numpy":
+        _ensure_x64()
+    return impl
+
+
+@contextlib.contextmanager
+def use_impl(impl: str):
+    """Scoped impl override: sets the configured impl (enabling JAX x64 if
+    the impl needs it) and restores both the impl and the prior x64 setting
+    on exit — so a jax-path test leaves the f32-default model tests alone."""
+    import jax
+
+    prev_x64 = bool(jax.config.jax_enable_x64)
+    prev = set_impl(impl)
+    try:
+        yield
+    finally:
+        set_impl(prev)
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+def _ensure_x64() -> None:
+    """Table columns are int64/uint64/float64; the jitted kernels need x64."""
+    import jax
+
+    if not jax.config.jax_enable_x64:
+        jax.config.update("jax_enable_x64", True)
+
+
+def _pow2_pad(n: int) -> int:
+    """Next power of two ≥ n (≥ 8): one jit trace per size bucket instead of
+    one per distinct length."""
+    p = 8
+    while p < n:
+        p <<= 1
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Jitted XLA kernels (built lazily: first non-numpy call pays the traces)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _jk():
+    """Namespace of jitted XLA kernels. The map expression is deliberately
+    TWO jit units (see module docstring: FMA contraction)."""
+    import jax
+    import jax.numpy as jnp
+
+    def _hash(k):
+        x = k.astype(jnp.uint64)
+        x = x ^ (x >> np.uint64(30))
+        x = x * np.uint64(_SPLITMIX_C1)
+        x = x ^ (x >> np.uint64(27))
+        x = x * np.uint64(_SPLITMIX_C2)
+        return x ^ (x >> np.uint64(31))
+
+    def _pid(k, P):
+        return (_hash(k) % np.uint64(P)).astype(jnp.int64)
+
+    def _map_mul(a):
+        return a * jnp.float32(1.0001)
+
+    def _map_add_softsign(p, b):
+        return p + b / (jnp.float32(1.0) + jnp.abs(b))
+
+    def _softsign(b):
+        return b / (jnp.float32(1.0) + jnp.abs(b))
+
+    def _encode(v):
+        return jnp.rint(v.astype(jnp.float64) * AGG_QUANTUM).astype(jnp.int64)
+
+    def _encode_w(v, w):
+        return _encode(v) * w
+
+    def _cumsum(x):
+        return jnp.cumsum(x)
+
+    def _probe(uniq_pad, probe, n_real):
+        pos = jnp.searchsorted(uniq_pad, probe).astype(jnp.int64)
+        posc = jnp.clip(pos, 0, n_real - 1)
+        hit = jnp.take(uniq_pad, posc) == probe
+        return hit, posc
+
+    def _cmp(col, thr):
+        return col > thr
+
+    ns = {
+        "hash": jax.jit(_hash),
+        "pid": jax.jit(_pid, static_argnums=1),
+        "map_mul": jax.jit(_map_mul),
+        "map_add_softsign": jax.jit(_map_add_softsign),
+        "softsign": jax.jit(_softsign),
+        "encode": jax.jit(_encode),
+        "encode_w": jax.jit(_encode_w),
+        "cumsum": jax.jit(_cumsum),
+        "probe": jax.jit(_probe, static_argnums=2),
+        "cmp": jax.jit(_cmp),
+    }
+    return ns
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret=True on CPU; same two-stage map split — the
+# interpreter compiles through XLA and has the same FMA hazard)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 2048  # 1-D element-wise block; multiple of the (8,128) f32 tile
+
+
+@lru_cache(maxsize=None)
+def _pk():
+    """Pallas kernel builders, keyed by interpret flag at call time."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def _ew_call(kernel, out_dtype, *arrays, interpret):
+        """Run an element-wise kernel over same-length 1-D arrays, padding
+        to a _BLOCK multiple (padding sliced off the result)."""
+        n = arrays[0].shape[0]
+        if n == 0:
+            return np.empty(0, out_dtype)
+        pad = (-n) % _BLOCK
+        padded = [np.concatenate([a, np.zeros(pad, a.dtype)]) if pad else a
+                  for a in arrays]
+        np_ = padded[0].shape[0]
+        spec = pl.BlockSpec((_BLOCK,), lambda i: (i,))
+        out = pl.pallas_call(
+            kernel,
+            grid=(np_ // _BLOCK,),
+            in_specs=[spec] * len(padded),
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((np_,), out_dtype),
+            interpret=interpret,
+        )(*padded)
+        return np.asarray(out)[:n]
+
+    def hash_kernel(k_ref, o_ref):
+        x = k_ref[...].astype(jnp.uint64)
+        x = x ^ (x >> np.uint64(30))
+        x = x * np.uint64(_SPLITMIX_C1)
+        x = x ^ (x >> np.uint64(27))
+        x = x * np.uint64(_SPLITMIX_C2)
+        o_ref[...] = x ^ (x >> np.uint64(31))
+
+    def hash64(keys, interpret):
+        return _ew_call(hash_kernel, np.uint64, keys.astype(np.uint64),
+                        interpret=interpret)
+
+    def pid_hist(keys, P, interpret):
+        """Fused hash + mod + histogram: pid per row AND per-partition
+        counts in one kernel pass. The histogram accumulates across the
+        (sequential) grid; padded tail rows are masked into a scratch
+        bucket ``P`` that is dropped on return."""
+        n = keys.shape[0]
+        if n == 0:
+            return np.zeros(0, np.int64), np.zeros(P, np.int64)
+        pad = (-n) % _BLOCK
+        k = np.concatenate([keys, np.zeros(pad, keys.dtype)]) if pad else keys
+        np_ = k.shape[0]
+        nlen = np.asarray([n], np.int64)
+
+        def kernel(n_ref, k_ref, pid_ref, hist_ref):
+            i = pl.program_id(0)
+            x = k_ref[...].astype(jnp.uint64)
+            x = x ^ (x >> np.uint64(30))
+            x = x * np.uint64(_SPLITMIX_C1)
+            x = x ^ (x >> np.uint64(27))
+            x = x * np.uint64(_SPLITMIX_C2)
+            x = x ^ (x >> np.uint64(31))
+            pid = (x % np.uint64(P)).astype(jnp.int64)
+            pid_ref[...] = pid
+            rows = i * _BLOCK + jax.lax.iota(jnp.int64, _BLOCK)
+            bucket = jnp.where(rows < n_ref[0], pid, P)
+            local = jnp.zeros(P + 1, jnp.int64).at[bucket].add(1)
+
+            @pl.when(i == 0)
+            def _init():
+                hist_ref[...] = jnp.zeros_like(hist_ref)
+
+            hist_ref[...] += local
+
+        pid, hist = pl.pallas_call(
+            kernel,
+            grid=(np_ // _BLOCK,),
+            in_specs=[
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+                pl.BlockSpec((P + 1,), lambda i: (0,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((np_,), np.int64),
+                jax.ShapeDtypeStruct((P + 1,), np.int64),
+            ],
+            interpret=interpret,
+        )(nlen, k)
+        return np.asarray(pid)[:n], np.asarray(hist)[:P]
+
+    def cmp_kernel_factory(thr, dtype):
+        thr = np.asarray(thr, dtype)
+
+        def kernel(c_ref, o_ref):
+            o_ref[...] = c_ref[...] > thr
+
+        return kernel
+
+    def filter_mask(col, thr, interpret):
+        return _ew_call(cmp_kernel_factory(thr, col.dtype), np.bool_, col,
+                        interpret=interpret)
+
+    def map_mul_kernel(a_ref, o_ref):
+        o_ref[...] = a_ref[...] * jnp.float32(1.0001)
+
+    def map_add_softsign_kernel(p_ref, b_ref, o_ref):
+        b = b_ref[...]
+        o_ref[...] = p_ref[...] + b / (jnp.float32(1.0) + jnp.abs(b))
+
+    def softsign_kernel(b_ref, o_ref):
+        b = b_ref[...]
+        o_ref[...] = b / (jnp.float32(1.0) + jnp.abs(b))
+
+    def map_derived(a, b, interpret):
+        if b is None:
+            return _ew_call(softsign_kernel, a.dtype, a, interpret=interpret)
+        # two pallas_calls — the unfused mul-then-add contract
+        part = _ew_call(map_mul_kernel, a.dtype, a, interpret=interpret)
+        return _ew_call(map_add_softsign_kernel, a.dtype, part, b,
+                        interpret=interpret)
+
+    def encode_kernel(v_ref, o_ref):
+        v = v_ref[...].astype(jnp.float64)
+        o_ref[...] = jnp.rint(v * AGG_QUANTUM).astype(jnp.int64)
+
+    def encode_w_kernel(v_ref, w_ref, o_ref):
+        v = v_ref[...].astype(jnp.float64)
+        o_ref[...] = jnp.rint(v * AGG_QUANTUM).astype(jnp.int64) * w_ref[...]
+
+    def encode(v, w, interpret):
+        if w is None:
+            return _ew_call(encode_kernel, np.int64, v, interpret=interpret)
+        return _ew_call(encode_w_kernel, np.int64, v, w.astype(np.int64),
+                        interpret=interpret)
+
+    def probe(uniq_pad, probe_vals, n_real, interpret):
+        """Vectorized binary search (searchsorted-left) over the whole
+        padded sorted-unique array held in one block; probes stream through
+        the grid. Matches the XLA/_probe semantics bitwise."""
+        L = uniq_pad.shape[0]
+        steps = max(int(L).bit_length(), 1)
+        n = probe_vals.shape[0]
+        pad = (-n) % _BLOCK
+        pv = np.concatenate([probe_vals, np.zeros(pad, probe_vals.dtype)]) \
+            if pad else probe_vals
+        np_ = pv.shape[0]
+
+        def kernel(u_ref, p_ref, hit_ref, pos_ref):
+            u = u_ref[...]
+            p = p_ref[...]
+            lo = jnp.zeros(p.shape, jnp.int64)
+            hi = jnp.full(p.shape, L, jnp.int64)
+            for _ in range(steps):
+                mid = (lo + hi) >> 1
+                below = jnp.take(u, mid) < p
+                lo = jnp.where(below, mid + 1, lo)
+                hi = jnp.where(below, hi, mid)
+            posc = jnp.clip(lo, 0, n_real - 1)
+            hit_ref[...] = jnp.take(u, posc) == p
+            pos_ref[...] = posc
+
+        spec = pl.BlockSpec((_BLOCK,), lambda i: (i,))
+        hit, pos = pl.pallas_call(
+            kernel,
+            grid=(np_ // _BLOCK,),
+            in_specs=[pl.BlockSpec((L,), lambda i: (0,)), spec],
+            out_specs=[spec, spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((np_,), np.bool_),
+                jax.ShapeDtypeStruct((np_,), np.int64),
+            ],
+            interpret=interpret,
+        )(uniq_pad, pv)
+        return np.asarray(hit)[:n], np.asarray(pos)[:n]
+
+    return {
+        "hash64": hash64,
+        "pid_hist": pid_hist,
+        "filter_mask": filter_mask,
+        "map_derived": map_derived,
+        "encode": encode,
+        "probe": probe,
+    }
+
+
+# ---------------------------------------------------------------------------
+# splitmix64 hash / partitioning
+# ---------------------------------------------------------------------------
+
+def _hash64_np(keys: np.ndarray) -> np.ndarray:
+    x = np.asarray(keys).astype(np.uint64, copy=True)
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint64(30)
+        x *= np.uint64(_SPLITMIX_C1)
+        x ^= x >> np.uint64(27)
+        x *= np.uint64(_SPLITMIX_C2)
+        x ^= x >> np.uint64(31)
+    return x
+
+
+def hash64(keys: np.ndarray, impl: str = "auto") -> np.ndarray:
+    """splitmix64 finalizer — deterministic across runs, platforms, impls."""
+    impl = _active_impl(impl)
+    keys = np.asarray(keys)
+    if impl == "numpy" or keys.size == 0:
+        return _hash64_np(keys)
+    if impl == "xla":
+        # no host-side cast: the kernel's own astype fuses into the jit,
+        # saving a full 16B/row round trip over the host arrays
+        return np.asarray(_jk()["hash"](keys))
+    return _pk()["hash64"](keys, interpret=impl == "interpret")
+
+
+def partition_ids(keys: np.ndarray, n_partitions: int,
+                  impl: str = "auto") -> np.ndarray:
+    """Partition id of each key: ``splitmix64(key) % P`` (0 when P=1)."""
+    P = max(int(n_partitions), 1)
+    keys = np.asarray(keys)
+    if P == 1:
+        return np.zeros(len(keys), np.int64)
+    impl = _active_impl(impl)
+    if impl == "numpy" or keys.size == 0:
+        return (_hash64_np(keys) % np.uint64(P)).astype(np.int64)
+    if impl == "xla":
+        return np.asarray(_jk()["pid"](keys, P))
+    pid, _ = _pk()["pid_hist"](keys, P, interpret=impl == "interpret")
+    return pid
+
+
+def _group_order(pid: np.ndarray, P: int) -> np.ndarray:
+    """Stable permutation grouping rows by pid ascending. numpy's stable
+    argsort is a radix sort only for ≤16-bit integer keys (~5x faster than
+    the int64 path at 1e7 rows), so cast when P fits."""
+    if P <= (1 << 16):
+        return np.argsort(pid.astype(np.uint16), kind="stable")
+    return np.argsort(pid, kind="stable")
+
+
+def partition_index(keys: np.ndarray, n_partitions: int,
+                    impl: str = "auto") -> tuple[np.ndarray, np.ndarray]:
+    """Grouped row index of a P-way hash split: ``(order, counts)`` where
+    ``order`` permutes rows into partition-major, row-stable order and
+    ``counts[p]`` is partition p's row count — so partition p's rows are
+    ``order[offset[p] : offset[p] + counts[p]]`` with ``offset = cumsum``.
+    Identical across impls (the permutation is fully determined by the
+    stable grouping contract)."""
+    P = max(int(n_partitions), 1)
+    keys = np.asarray(keys)
+    n = len(keys)
+    if P == 1:
+        return np.arange(n, dtype=np.int64), np.asarray([n], np.int64)
+    impl = _active_impl(impl)
+    if impl in ("pallas", "interpret") and n:
+        pid, counts = _pk()["pid_hist"](keys, P,
+                                        interpret=impl == "interpret")
+        return _group_order(pid, P).astype(np.int64, copy=False), counts
+    pid = partition_ids(keys, P, impl)
+    counts = np.bincount(pid, minlength=P).astype(np.int64)
+    return _group_order(pid, P).astype(np.int64, copy=False), counts
+
+
+# ---------------------------------------------------------------------------
+# Element-wise operators: filter compare, map expression
+# ---------------------------------------------------------------------------
+
+def _pin_threshold(col: np.ndarray, threshold: float):
+    """Compare dtype contract: float columns compare in their own width,
+    everything else against float64 — impl-invariant (independent of the
+    JAX x64 setting and numpy promotion rules)."""
+    if col.dtype.kind == "f":
+        return col.dtype.type(threshold)
+    return np.float64(threshold)
+
+
+def filter_mask(col: np.ndarray, threshold: float,
+                impl: str = "auto") -> np.ndarray:
+    """Boolean FILTER mask ``col > threshold`` under the pinned-dtype
+    compare contract."""
+    col = np.asarray(col)
+    thr = _pin_threshold(col, threshold)
+    impl = _active_impl(impl)
+    if impl == "numpy" or col.size == 0:
+        return col > thr
+    if impl == "xla":
+        return np.asarray(_jk()["cmp"](col, thr))
+    return _pk()["filter_mask"](col, thr, interpret=impl == "interpret")
+
+
+def map_derived(a: np.ndarray, b: np.ndarray | None,
+                impl: str = "auto") -> np.ndarray:
+    """The MAP expression: ``a*1.0001f + softsign(b)`` (or ``softsign(a)``
+    when only one input column exists). Evaluated unfused in every impl —
+    each mul/add/div/abs correctly rounded — so the result is bitwise
+    independent of batch shape (load-bearing for delta refresh: chunked and
+    whole-table evaluation must agree)."""
+    a = np.asarray(a)
+    b = None if b is None else np.asarray(b)
+    impl = _active_impl(impl)
+    if impl == "numpy" or a.size == 0:
+        if b is None:
+            return a / (np.float32(1.0) + np.abs(a))
+        return a * np.float32(1.0001) + b / (np.float32(1.0) + np.abs(b))
+    if impl == "xla":
+        k = _jk()
+        if b is None:
+            return np.asarray(k["softsign"](a))
+        # two jit units: XLA would contract the mul into an FMA if fused
+        return np.asarray(k["map_add_softsign"](k["map_mul"](a), b))
+    return _pk()["map_derived"](a, b, interpret=impl == "interpret")
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point AGG: encode + weighted segment reduction
+# ---------------------------------------------------------------------------
+
+def fixed_point_encode(values: np.ndarray, weights: np.ndarray | None = None,
+                       impl: str = "auto") -> np.ndarray:
+    """Per-row int64 AGG contribution: ``rint(v * AGG_QUANTUM)`` (times the
+    signed Z-set weight when given). Exact: every later addition is integer."""
+    values = np.asarray(values)
+    impl = _active_impl(impl)
+    if impl == "numpy" or values.size == 0:
+        fp = np.rint(np.asarray(values, np.float64) * AGG_QUANTUM).astype(
+            np.int64
+        )
+        return fp if weights is None else fp * weights
+    if impl == "xla":
+        k = _jk()
+        if weights is None:
+            return np.asarray(k["encode"](values))
+        return np.asarray(k["encode_w"](values, np.asarray(weights, np.int64)))
+    return _pk()["encode"](values, weights, interpret=impl == "interpret")
+
+
+def _segment_sums_np(contrib_sorted: np.ndarray,
+                     ends: np.ndarray) -> np.ndarray:
+    """Exact int64 per-segment sums from a sorted contribution vector via
+    cumsum-diff; int64 wraparound matches np.add.at bit for bit."""
+    with np.errstate(over="ignore"):
+        c = np.cumsum(contrib_sorted)
+        seg = c[ends].copy()
+        seg[1:] -= c[ends[:-1]]
+    return seg
+
+
+def group_reduce(
+    keys: np.ndarray,
+    cols: dict[str, tuple[np.ndarray, str]],
+    weights: np.ndarray | None = None,
+    impl: str = "auto",
+) -> tuple[np.ndarray, dict[str, np.ndarray], np.ndarray]:
+    """Weighted segment reduction over (implicitly sorted) group keys.
+
+    ``cols`` maps output name → ``(values, kind)``; kind ``"fixed"`` encodes
+    values through ``fixed_point_encode`` (times ``weights`` when given),
+    kind ``"int"`` sums raw int64 (the AGG ``count`` column of a merge).
+    Returns ``(sorted unique keys, {name: int64 sums}, counts)`` with
+    ``counts`` the per-group sum of ``weights`` (group sizes when None).
+
+    numpy impl is the reference ``np.unique``+``np.add.at`` loop; the
+    jax/pallas impls encode and scan through jitted kernels around a host
+    sort. Bitwise-equal because the sums are exact integers (mod 2^64) —
+    independent of both accumulation order and grouping method.
+    """
+    keys = np.asarray(keys)
+    impl = _active_impl(impl)
+    if impl == "numpy" or keys.size == 0:
+        uniq, inv = np.unique(keys, return_inverse=True)
+        n = len(uniq)
+        sums: dict[str, np.ndarray] = {}
+        with np.errstate(over="ignore"):
+            for name, (v, kind) in cols.items():
+                contrib = (
+                    np.asarray(v, np.int64)
+                    if kind == "int"
+                    else fixed_point_encode(v, weights, impl="numpy")
+                )
+                acc = np.zeros(n, np.int64)
+                np.add.at(acc, inv, contrib)
+                sums[name] = acc
+            if weights is None:
+                counts = np.bincount(inv, minlength=n).astype(np.int64)
+            else:
+                counts = np.zeros(n, np.int64)
+                np.add.at(counts, inv, weights)
+        return uniq, sums, counts
+    # jitted path: host sort for the grouping permutation (unstable is fine —
+    # integer sums commute exactly), jitted encode + cumsum for the sums
+    order = np.argsort(keys)
+    sk = keys[order]
+    boundary = np.nonzero(sk[1:] != sk[:-1])[0]
+    ends = np.concatenate([boundary, [len(sk) - 1]])
+    uniq = sk[ends]
+    cum = _jk()["cumsum"]
+    sums = {}
+    for name, (v, kind) in cols.items():
+        contrib = (
+            np.asarray(v, np.int64)
+            if kind == "int"
+            else fixed_point_encode(v, weights, impl=impl)
+        )
+        c = np.asarray(cum(contrib[order]))
+        with np.errstate(over="ignore"):
+            seg = c[ends].copy()
+            seg[1:] -= c[ends[:-1]]
+        sums[name] = seg
+    if weights is None:
+        starts = np.concatenate([[0], ends[:-1] + 1])
+        counts = (ends - starts + 1).astype(np.int64)
+    else:
+        w = np.asarray(weights, np.int64)
+        counts = _segment_sums_np(w[order], ends)
+    return uniq, sums, counts
+
+
+# ---------------------------------------------------------------------------
+# Join probe: first-occurrence index build + sorted probe
+# ---------------------------------------------------------------------------
+
+def first_occurrence(keys: np.ndarray,
+                     impl: str = "auto") -> tuple[np.ndarray, np.ndarray]:
+    """(sorted unique keys, row index of each key's FIRST occurrence) — the
+    PK-style probe index every right join side is reduced to. The stable
+    sort is the contract (first occurrence in input order); it runs on host
+    in every impl."""
+    keys = np.asarray(keys)
+    impl = _active_impl(impl)
+    if impl == "numpy" or keys.size == 0:
+        order = np.argsort(keys, kind="stable")
+        uniq, first = np.unique(keys[order], return_index=True)
+        return uniq, order[first]
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    firstmask = np.empty(len(sk), bool)
+    firstmask[0] = True
+    np.not_equal(sk[1:], sk[:-1], out=firstmask[1:])
+    sel = np.nonzero(firstmask)[0]
+    return sk[sel], order[sel]
+
+
+def probe_sorted(uniq: np.ndarray, probe: np.ndarray,
+                 impl: str = "auto") -> tuple[np.ndarray, np.ndarray]:
+    """Probe sorted-unique ``uniq`` with ``probe`` values: ``(hit, pos)``
+    where ``pos`` is the searchsorted-left position clipped to the valid
+    range and ``hit[i]`` iff ``uniq[pos[i]] == probe[i]`` — exactly the
+    numpy idiom ``op_join`` / ``_right_mapping_changes`` always used.
+    Empty ``uniq`` → all-miss with zero positions."""
+    uniq = np.asarray(uniq)
+    probe = np.asarray(probe)
+    if len(uniq) == 0 or len(probe) == 0:
+        return np.zeros(len(probe), bool), np.zeros(len(probe), np.int64)
+    impl = _active_impl(impl)
+    if impl == "numpy":
+        pos = np.searchsorted(uniq, probe)
+        posc = np.clip(pos, 0, len(uniq) - 1)
+        return uniq[posc] == probe, posc
+    # pad the index to a power of two with int64-max sentinels: one trace
+    # per size bucket. Sentinels sort after every real key, so positions
+    # for probe < I64MAX are unchanged; the hit test gathers at the
+    # real-clipped position, reproducing numpy clip semantics even for
+    # probe == I64MAX.
+    L = _pow2_pad(len(uniq))
+    if L != len(uniq):
+        uniq_pad = np.concatenate(
+            [uniq, np.full(L - len(uniq), _I64MAX, uniq.dtype)]
+        )
+    else:
+        uniq_pad = uniq
+    if impl == "xla":
+        hit, pos = _jk()["probe"](uniq_pad, probe, len(uniq))
+        return np.asarray(hit), np.asarray(pos)
+    hit, pos = _pk()["probe"](uniq_pad, probe, len(uniq),
+                              interpret=impl == "interpret")
+    return hit, pos

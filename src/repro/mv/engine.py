@@ -44,7 +44,8 @@ from typing import Any, Iterable, Sequence
 from ..core.altopt import Plan
 from ..core.speedup import CostModel
 from .catalog import MemoryCatalog
-from .storage import DiskStore, table_nbytes
+from .storage import DiskStore
+from .tableops import table_sizes
 from .workloads import Workload
 
 
@@ -260,7 +261,9 @@ class ThreadedEngine:
 
     def _publish(self, v: int, out: Any, rt: _RunState) -> None:
         node = self.workload.nodes[v]
-        size = table_nbytes(out)
+        # cached-size path: weight-column sums are memoized per array, so a
+        # weighted part admitted repeatedly is not re-summed (tableops)
+        size = max(table_sizes(out))
         if v in rt.flagged and rt.catalog.try_put(node.name, out, size):
             fut = rt.writer.submit(self.store.write, node.name, out)
             with rt.wf_lock:

@@ -59,7 +59,7 @@ from ..core.altopt import Plan, serial_plan, solve
 from ..core.speedup import APPENDED, CHANGED, DELTA, REPLACED, STATIC, CostModel
 from . import tableops as T
 from .engine import RunReport, SimReport, ThreadedEngine, _RunState, simulate_events
-from .storage import DiskStore, table_nbytes
+from .storage import DiskStore
 from .workloads import UpdateSpec, Workload, incremental_view
 
 
@@ -212,8 +212,9 @@ class IncrementalEngine(ThreadedEngine):
         self.statuses[v] = DELTA if retracts else APPENDED
         # a Z-set delta with |weight| > 1 rows expands to more live bytes
         # than its physical encoding — charge the catalog the larger of the
-        # two (the weighted size model for duplicate-row sources)
-        size = max(table_nbytes(delta), T.weighted_nbytes(delta))
+        # two (the weighted size model for duplicate-row sources); one
+        # cached-size pass instead of re-summing the weight column per probe
+        size = max(T.table_sizes(delta))
         if v in rt.flagged and rt.catalog.try_put(node.name, delta, size):
             fut = rt.writer.submit(self.store.append, node.name, delta)
             with rt.wf_lock:

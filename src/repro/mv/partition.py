@@ -57,6 +57,7 @@ import numpy as np
 
 from ..core.graph import normalize_shares
 from ..core.speedup import CostModel
+from . import dataplane
 from . import tableops as T
 from .storage import DiskStore, PARTITION_SEP, partition_entry_name
 from .workloads import MVNode, UpdateSpec, Workload
@@ -85,24 +86,15 @@ __all__ = [
 
 def _hash64(keys: np.ndarray) -> np.ndarray:
     """splitmix64 finalizer — deterministic across runs and platforms (no
-    Python hash randomization, no dtype-width surprises)."""
-    x = np.asarray(keys).astype(np.uint64, copy=True)
-    with np.errstate(over="ignore"):
-        x ^= x >> np.uint64(30)
-        x *= np.uint64(0xBF58476D1CE4E5B9)
-        x ^= x >> np.uint64(27)
-        x *= np.uint64(0x94D049BB133111EB)
-        x ^= x >> np.uint64(31)
-    return x
+    Python hash randomization, no dtype-width surprises). Dispatches through
+    the data plane (numpy reference by default, jitted/Pallas kernels under
+    ``SC_DATAPLANE``)."""
+    return dataplane.hash64(keys)
 
 
 def partition_of(keys: np.ndarray, n_partitions: int) -> np.ndarray:
     """Partition id of each key (0 when P=1)."""
-    P = max(int(n_partitions), 1)
-    keys = np.asarray(keys)
-    if P == 1:
-        return np.zeros(len(keys), np.int64)
-    return (_hash64(keys) % np.uint64(P)).astype(np.int64)
+    return dataplane.partition_ids(keys, n_partitions)
 
 
 def partition_table(
@@ -111,14 +103,25 @@ def partition_table(
     """Deterministic P-way hash split by ``key_col``; row order (and with it
     canonical rid order) is preserved within every partition. Routes plain
     content and Z-set deltas alike — each delta row goes to the partition
-    its own key hashes to."""
+    its own key hashes to.
+
+    One fused hash+histogram+grouping pass through the data plane, then one
+    gather per column; each partition is a zero-copy slice view of the
+    grouped arrays (bitwise-identical rows to the old per-partition
+    ``nonzero(pid == p)`` gathers, without the P passes)."""
     P = max(int(n_partitions), 1)
     if P == 1:
         return [dict(table)]
     if key_col not in table:
         raise ValueError(f"partitioning needs a {key_col!r} column")
-    pid = partition_of(table[key_col], P)
-    return [T.take_rows(table, np.nonzero(pid == p)[0]) for p in range(P)]
+    order, counts = dataplane.partition_index(table[key_col], P)
+    offsets = np.zeros(P + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    grouped = {k: np.asarray(v)[order] for k, v in table.items()}
+    return [
+        {k: v[offsets[p]:offsets[p + 1]] for k, v in grouped.items()}
+        for p in range(P)
+    ]
 
 
 def dirty_partitions(delta: T.Table, n_partitions: int) -> list[int]:

@@ -2,11 +2,13 @@
 
 A *table* is a dict of equal-length 1-D arrays. Operators mirror the
 select-project-join units the paper carves out of TPC-DS queries: SCAN,
-FILTER, PROJECT, JOIN (equi), AGG (group-by sum/count). Arithmetic runs
-through JAX (jitted element-wise kernels); data-dependent compaction
-(filter/join output sizes) and the exact integer accumulation the
-incremental-refresh algebra needs happen on host, as they would in any
-vectorized engine.
+FILTER, PROJECT, JOIN (equi), AGG (group-by sum/count). The array-level
+inner loops — hash, compare, map expression, fixed-point segment
+reduction, join probe — run through ``mv/dataplane.py``, which dispatches
+between the numpy reference (default; bitwise contract) and jitted
+JAX / Pallas paths (``SC_DATAPLANE`` / ``dataplane.use_impl``, DESIGN.md
+§9); data-dependent compaction (filter/join output sizes) and splicing
+happen on host, as they would in any vectorized engine.
 
 These run the *real-execution* experiments: the Controller materializes their
 outputs through the DiskStore / MemoryCatalog, and results must be bitwise
@@ -56,9 +58,11 @@ Per-operator delta rules:
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import weakref
+
 import numpy as np
+
+from . import dataplane
 
 Table = dict[str, np.ndarray]
 
@@ -126,6 +130,61 @@ def n_rows(table: Table) -> int:
     return len(np.asarray(next(iter(table.values())))) if table else 0
 
 
+# Memoized weight-column live-row sums: the catalog admission path sizes the
+# same resident delta repeatedly (feasibility probes, try_put, append), and
+# each ``weighted_nbytes`` call re-clipped and re-summed the weight column.
+# Keyed by the weight array's identity, validated by weakref (the finalizer
+# callback removes the entry before the id can be recycled), bounded.
+_LIVE_ROWS_CACHE: dict[int, tuple[weakref.ref, int]] = {}
+_LIVE_ROWS_CACHE_MAX = 4096
+
+
+def _live_rows(table: Table) -> int:
+    """Total positive Z-set multiplicity of a delta (cached per weight
+    array)."""
+    w = table[WEIGHT_COL]
+    key = id(w)
+    hit = _LIVE_ROWS_CACHE.get(key)
+    if hit is not None and hit[0]() is w:
+        return hit[1]
+    live = int(np.clip(weights_of(table), 0, None).sum())
+    try:
+        ref = weakref.ref(
+            w, lambda _r, k=key: _LIVE_ROWS_CACHE.pop(k, None)
+        )
+    except TypeError:  # non-weakref-able column (plain list input)
+        return live
+    if len(_LIVE_ROWS_CACHE) >= _LIVE_ROWS_CACHE_MAX:
+        _LIVE_ROWS_CACHE.clear()
+    _LIVE_ROWS_CACHE[key] = (ref, live)
+    return live
+
+
+def table_nbytes(table: Table) -> int:
+    """Physical bytes of a table's columns (same accounting as
+    ``storage.table_nbytes``; here so size probes need not import storage)."""
+    return int(sum(np.asarray(v).nbytes for v in table.values()))
+
+
+def table_sizes(table: Table) -> tuple[int, int]:
+    """``(physical bytes, weighted live bytes)`` in one pass — what the
+    catalog admission path charges (``max`` of the two for a Z-set delta).
+    The weight-column sum is memoized per array, so repeated admission /
+    feasibility probes of one published delta cost O(columns), not O(rows).
+    The memo assumes the weight column is not mutated in place — true for
+    every published part (the engine treats tables as immutable); callers
+    that do mutate should use ``weighted_nbytes``, which never caches."""
+    n = n_rows(table)
+    w_bytes = (
+        np.asarray(table[WEIGHT_COL]).nbytes if WEIGHT_COL in table else 0
+    )
+    phys_all = table_nbytes(table)
+    phys = phys_all - w_bytes
+    if WEIGHT_COL not in table or n == 0:
+        return phys_all, phys
+    return phys_all, int(round(phys * (_live_rows(table) / n)))
+
+
 def weighted_nbytes(table: Table) -> int:
     """Bytes of live content a table expands to when materialized.
 
@@ -135,7 +194,8 @@ def weighted_nbytes(table: Table) -> int:
     the per-row payload bytes times the total *positive* multiplicity — the
     size model a Memory Catalog entry must be charged when the resident
     delta can be larger than its physical encoding. Retraction rows carry
-    no live content."""
+    no live content. Always recomputed (mutation-safe); the admission path
+    uses the memoized ``table_sizes``."""
     n = n_rows(table)
     phys = int(sum(
         np.asarray(v).nbytes for k, v in table.items() if k != WEIGHT_COL
@@ -329,17 +389,12 @@ def consolidate_zset(delta: Table) -> Table:
     return take_rows(out, keep)
 
 
-@jax.jit
-def _filter_mask(col: jnp.ndarray, threshold: float) -> jnp.ndarray:
-    return col > threshold
-
-
 def op_filter(table: Table, col: str = "c0", threshold: float = 0.0) -> Table:
     if col not in table:
         col = next(iter(data_cols(table)), None)
         if col is None:  # meta-only table (e.g. a key-only aggregate upstream)
             return dict(table)
-    mask = np.asarray(_filter_mask(jnp.asarray(table[col]), threshold))
+    mask = dataplane.filter_mask(np.asarray(table[col]), threshold)
     idx = np.nonzero(mask)[0]
     return {k: np.asarray(v)[idx] for k, v in table.items()}
 
@@ -366,28 +421,26 @@ def _softsign(x: np.ndarray) -> np.ndarray:
 def op_map(table: Table) -> Table:
     """Element-wise derived column (models expression evaluation).
 
-    Deliberately *not* a jitted JAX kernel: delta refresh needs elementwise
-    arithmetic whose result is bitwise independent of the batch shape, and
-    XLA's shape-specialized codegen rounds transcendental approximations
-    (tanh) differently across batch sizes. Mul/add/div/abs are correctly
-    rounded by IEEE-754 — unfused numpy evaluation is deterministic per
-    element no matter how the rows are chunked.
+    The expression must be bitwise independent of the batch shape (delta
+    refresh evaluates it over chunks that a full recompute evaluates whole),
+    so every impl evaluates it *unfused*: mul/add/div/abs are correctly
+    rounded by IEEE-754, and ``dataplane.map_derived`` keeps the jitted
+    paths in two separate kernels so XLA cannot contract the mul+add into
+    an FMA (which would change the low bit vs the numpy reference).
     """
     out = dict(table)
     vals = [np.asarray(table[k]) for k in data_cols(table)]
     if len(vals) >= 2:
-        out["derived"] = vals[0] * np.float32(1.0001) + _softsign(vals[1])
+        out["derived"] = dataplane.map_derived(vals[0], vals[1])
     elif vals:
-        out["derived"] = _softsign(vals[0])
+        out["derived"] = dataplane.map_derived(vals[0], None)
     return out
 
 
 def _first_occurrence_index(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """(sorted unique keys, row index of each key's first occurrence) — the
     PK-style probe index every right join side is reduced to."""
-    order = np.argsort(keys, kind="stable")
-    uniq, first = np.unique(keys[order], return_index=True)
-    return uniq, order[first]
+    return dataplane.first_occurrence(keys)
 
 
 def op_join(left: Table, right: Table) -> Table:
@@ -402,9 +455,7 @@ def op_join(left: Table, right: Table) -> Table:
     """
     lk, rk = np.asarray(left["key"]), np.asarray(right["key"])
     uniq, ridx_for = _first_occurrence_index(rk)
-    pos = np.searchsorted(uniq, lk)
-    pos = np.clip(pos, 0, len(uniq) - 1)
-    matched = uniq[pos] == lk if len(uniq) else np.zeros(len(lk), bool)
+    matched, pos = dataplane.probe_sorted(uniq, lk)
     li = np.nonzero(matched)[0]
     ri = ridx_for[pos[matched]] if len(uniq) else np.array([], np.int64)
     out: Table = {}
@@ -441,13 +492,8 @@ def _right_mapping_changes(
     uo, io = _first_occurrence_index(np.asarray(right_old["key"]))
     un, inw = _first_occurrence_index(np.asarray(right_new["key"]))
 
-    def _lookup(uniq, probe):
-        pos = np.searchsorted(uniq, probe)
-        pos = np.clip(pos, 0, max(len(uniq) - 1, 0))
-        hit = uniq[pos] == probe if len(uniq) else np.zeros(len(probe), bool)
-        return hit, pos
-    old_has, opos = _lookup(uo, candidates)
-    new_has, npos = _lookup(un, candidates)
+    old_has, opos = dataplane.probe_sorted(uo, candidates)
+    new_has, npos = dataplane.probe_sorted(un, candidates)
     both = old_has & new_has
     changed = np.zeros(len(candidates), bool)
     if both.any():
@@ -581,22 +627,16 @@ def op_agg(table: Table) -> Table:
     """
     keys = np.asarray(table["key"])
     w = weights_of(table) if WEIGHT_COL in table else None
-    uniq, inv = np.unique(keys, return_inverse=True)
-    n = len(uniq)
+    cols = {
+        f"sum_{k}": (np.asarray(table[k]), "fixed")
+        for k in data_cols(table)
+        if np.issubdtype(np.asarray(table[k]).dtype, np.number)
+    }
+    uniq, sums, counts = dataplane.group_reduce(keys, cols, weights=w)
     out: Table = {"key": uniq}
-    for k in data_cols(table):
-        v = np.asarray(table[k])
-        if np.issubdtype(v.dtype, np.number):
-            acc = np.zeros(n, np.int64)
-            fp = _fixed_point(v)
-            np.add.at(acc, inv, fp if w is None else fp * w)
-            out[f"sum_{k}"] = acc.astype(np.float64) / AGG_QUANTUM
-    if w is None:
-        out["count"] = np.bincount(inv, minlength=n).astype(np.int64)
-    else:
-        cnt = np.zeros(n, np.int64)
-        np.add.at(cnt, inv, w)
-        out["count"] = cnt
+    for name, acc in sums.items():
+        out[name] = acc.astype(np.float64) / AGG_QUANTUM
+    out["count"] = counts
     return out
 
 
@@ -608,26 +648,28 @@ def merge_agg(old: Table, delta: Table) -> Table:
     rows and are dropped, exactly as a full recompute would never emit
     them. Key order of the result is sorted-unique, matching ``op_agg``."""
     ok, dk = np.asarray(old["key"]), np.asarray(delta["key"])
-    uniq = np.union1d(ok, dk)
-    oi = np.searchsorted(uniq, ok)
-    di = np.searchsorted(uniq, dk)
-    out: Table = {"key": uniq}
+    keys = np.concatenate([ok, dk])
+    # one segment reduction over the concatenated partials: sums re-enter
+    # fixed-point (kind "fixed"), counts add raw (kind "int"); per-key
+    # integer addition is exact, so this is bitwise the old scatter-merge
+    cols: dict[str, tuple[np.ndarray, str]] = {}
     for col in old:
         if col == "key":
             continue
         ov = np.asarray(old[col])
-        dv = np.asarray(delta[col]) if col in delta else None
+        dv = (
+            np.asarray(delta[col])
+            if col in delta
+            else np.zeros(len(dk), ov.dtype)
+        )
+        cols[col] = (np.concatenate([ov, dv]),
+                     "int" if col == "count" else "fixed")
+    uniq, sums, _counts = dataplane.group_reduce(keys, cols, weights=None)
+    out: Table = {"key": uniq}
+    for col, acc in sums.items():
         if col == "count":
-            acc = np.zeros(len(uniq), np.int64)
-            acc[oi] = ov
-            if dv is not None:
-                acc[di] += dv
             out[col] = acc
         else:
-            acc = np.zeros(len(uniq), np.int64)
-            acc[oi] = _fixed_point(ov)
-            if dv is not None:
-                acc[di] += _fixed_point(dv)
             out[col] = acc.astype(np.float64) / AGG_QUANTUM
     live = out["count"] != 0
     if not live.all():
