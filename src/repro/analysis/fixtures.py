@@ -1,0 +1,80 @@
+"""Must-fire fixtures: the two historical bugs sc-lint exists to catch.
+
+Both patterns shipped in this repo and were fixed at runtime cost; they are
+kept here as executable regression anchors. ``tools/sc_lint.py --ci`` (and
+``tests/analysis/test_determinism.py``) assert that the linter FIRES on each
+legacy pattern and stays QUIET on the shipped fix — if a lint rule rots,
+CI fails even though the repo itself is clean.
+
+Bug 1 — fused shape-specialized tanh (batch invariance). The original MAP
+kernel evaluated ``a*1.0001 + tanh(b)`` in one jit unit: XLA contracted the
+mul+add into an FMA and picked shape-dependent tanh approximations, so a
+chunked delta refresh disagreed with a whole-table recompute in the low
+bit. Fix: softsign instead of tanh, split into two jit units
+(``dataplane._jk``'s ``map_mul`` / ``map_add_softsign``).
+
+Bug 2 — ``_filter_mask`` static threshold. The filter compare was jitted
+with its float threshold in ``static_argnums``: every distinct threshold
+value (one per FILTER node) triggered a full retrace. Fix: the threshold
+is traced (``_jk``'s ``cmp``), pinned to the column dtype on the host.
+"""
+from __future__ import annotations
+
+import textwrap
+
+__all__ = [
+    "LEGACY_FILTER_MASK_SRC",
+    "SHIPPED_FILTER_MASK_SRC",
+    "legacy_fused_map",
+    "shipped_map_kernels",
+]
+
+LEGACY_FILTER_MASK_SRC = textwrap.dedent(
+    '''
+    import jax
+    import jax.numpy as jnp
+
+
+    def _filter_mask(col, threshold):
+        return jnp.asarray(col) > threshold
+
+
+    # BUG: threshold is a value, not a shape — one retrace per distinct
+    # FILTER threshold in the workload
+    filter_mask_jit = jax.jit(_filter_mask, static_argnums=1)
+    '''
+)
+
+SHIPPED_FILTER_MASK_SRC = textwrap.dedent(
+    '''
+    import jax
+    import jax.numpy as jnp
+
+
+    def _filter_mask(col, threshold):
+        return jnp.asarray(col) > threshold
+
+
+    filter_mask_jit = jax.jit(_filter_mask)  # threshold traced: one trace
+    '''
+)
+
+
+def legacy_fused_map():
+    """The historical MAP kernel: one jit unit, tanh + contractable mul/add.
+    Trace with two same-length float32 arrays."""
+    import jax
+    import jax.numpy as jnp
+
+    def _map_fused(a, b):
+        return a * jnp.float32(1.0001) + jnp.tanh(b)
+
+    return jax.jit(_map_fused)
+
+
+def shipped_map_kernels():
+    """The shipped fix: the two separately-jitted softsign kernels."""
+    from ..mv.dataplane import _jk
+
+    k = _jk()
+    return k["map_mul"], k["map_add_softsign"]

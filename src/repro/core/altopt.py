@@ -432,20 +432,16 @@ def hierarchical_plan(
     )
     # the per-slice MKP ignores the ≤ k-1-step residency spill across slice
     # boundaries; if that overlap overflows the budget, shed the least dense
-    # pins until the exact expanded-window check passes
-    while flagged and not expanded.is_feasible(
-        flagged, order, budget, n_workers
-    ):
-        flagged.discard(
-            min(
-                flagged,
-                key=lambda i: expanded.scores[i]
-                / max(expanded.sizes[i], 1e-12),
-            )
-        )
-    flagged = frozenset(flagged)
-    assert expanded.is_feasible(flagged, order, budget, n_workers), (
-        "hierarchical planner produced infeasible plan"
+    # pins until the exact expanded-window check passes. The verify+repair
+    # loop lives in analysis.plan_check (shared with sc-lint), which also
+    # yields a minimal counterexample interleaving if repair cannot converge.
+    from ..analysis.plan_check import find_counterexample, repair
+
+    flagged, _shed_trail = repair(expanded, flagged, order, budget, n_workers)
+    cex = find_counterexample(expanded, flagged, order, budget, n_workers)
+    assert cex is None, (
+        "hierarchical planner produced infeasible plan: "
+        + cex.describe(expanded)
     )
     return Plan(
         order=tuple(order),

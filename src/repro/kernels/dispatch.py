@@ -61,6 +61,19 @@ def set_kernel_impl(impl: str | None) -> str:
     return prev
 
 
+def describe() -> str:
+    """One-line dispatch summary for tool/report headers: the configured
+    impl, what "auto" currently resolves to, and the accepted impl set."""
+    try:
+        resolved = resolve("auto")
+    except Exception as e:  # jax missing/broken: still describable
+        resolved = f"unresolvable ({e})"
+    return (
+        f"kernel impl: configured={_configured!r} resolves_to={resolved!r} "
+        f"valid={VALID_IMPLS}"
+    )
+
+
 def resolve(impl: str = "auto") -> str:
     """Resolve a per-call ``impl`` argument: an explicit value wins, "auto"
     defers to the configured impl, and a configured "auto" picks the backend

@@ -49,7 +49,11 @@ Parity contract — every primitive is bitwise-equal across impls:
   the numpy clip semantics even when the probe value equals the sentinel.
 
 Non-numpy impls require JAX x64 (int64/uint64/float64 table columns); it is
-enabled lazily on first use and ``use_impl`` restores the prior setting.
+enabled lazily, per jitted call, through the exception-safe ``_lazy_x64``
+scope: on success the setting stays enabled (lazy), but a kernel that raises
+restores the prior state — an ``SC_DATAPLANE`` impl switch whose first call
+fails cannot leak x64 into the f32-default model stack. ``use_impl``
+restores both the impl and the prior x64 setting on exit.
 """
 from __future__ import annotations
 
@@ -140,20 +144,11 @@ def resolve_impl(impl: str = "auto") -> str:
     return "numpy"
 
 
-def _active_impl(impl: str) -> str:
-    """Resolution used by the primitives: like ``resolve_impl`` but enables
-    JAX x64 (int64/uint64/float64 columns) when a jitted impl is selected."""
-    impl = resolve_impl(impl)
-    if impl != "numpy":
-        _ensure_x64()
-    return impl
-
-
 @contextlib.contextmanager
 def use_impl(impl: str):
-    """Scoped impl override: sets the configured impl (enabling JAX x64 if
-    the impl needs it) and restores both the impl and the prior x64 setting
-    on exit — so a jax-path test leaves the f32-default model tests alone."""
+    """Scoped impl override: sets the configured impl and restores both the
+    impl and the prior JAX x64 setting on exit (normal or exceptional) — so
+    a jax-path test leaves the f32-default model tests alone."""
     import jax
 
     prev_x64 = bool(jax.config.jax_enable_x64)
@@ -165,12 +160,28 @@ def use_impl(impl: str):
         jax.config.update("jax_enable_x64", prev_x64)
 
 
-def _ensure_x64() -> None:
-    """Table columns are int64/uint64/float64; the jitted kernels need x64."""
+@contextlib.contextmanager
+def _lazy_x64():
+    """Lazy, exception-safe x64 enable around one jitted-path call.
+
+    Table columns are int64/uint64/float64, so every non-numpy kernel needs
+    ``jax_enable_x64``. It is enabled on entry and deliberately left enabled
+    on success (lazy: later calls pay nothing) — but if the kernel raises,
+    the prior setting is restored before the error propagates, so switching
+    ``SC_DATAPLANE`` to a broken impl cannot leak x64 state into unrelated
+    f32 model code.
+    """
     import jax
 
-    if not jax.config.jax_enable_x64:
+    prev = bool(jax.config.jax_enable_x64)
+    if not prev:
         jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    except BaseException:
+        if not prev:
+            jax.config.update("jax_enable_x64", False)
+        raise
 
 
 def _pow2_pad(n: int) -> int:
@@ -223,8 +234,12 @@ def _jk():
         return jnp.cumsum(x)
 
     def _probe(uniq_pad, probe, n_real):
+        # n_real is TRACED (a value, not a size): making it static would
+        # retrace once per distinct unique-key count, defeating the pow2
+        # padding's one-trace-per-size-bucket contract (sc-lint's
+        # static-arg-retrace rule guards this)
         pos = jnp.searchsorted(uniq_pad, probe).astype(jnp.int64)
-        posc = jnp.clip(pos, 0, n_real - 1)
+        posc = jnp.clip(pos, 0, jnp.int64(n_real) - 1)
         hit = jnp.take(uniq_pad, posc) == probe
         return hit, posc
 
@@ -240,7 +255,7 @@ def _jk():
         "encode": jax.jit(_encode),
         "encode_w": jax.jit(_encode_w),
         "cumsum": jax.jit(_cumsum),
-        "probe": jax.jit(_probe, static_argnums=2),
+        "probe": jax.jit(_probe),
         "cmp": jax.jit(_cmp),
     }
     return ns
@@ -458,15 +473,16 @@ def _hash64_np(keys: np.ndarray) -> np.ndarray:
 
 def hash64(keys: np.ndarray, impl: str = "auto") -> np.ndarray:
     """splitmix64 finalizer — deterministic across runs, platforms, impls."""
-    impl = _active_impl(impl)
+    impl = resolve_impl(impl)
     keys = np.asarray(keys)
     if impl == "numpy" or keys.size == 0:
         return _hash64_np(keys)
-    if impl == "xla":
-        # no host-side cast: the kernel's own astype fuses into the jit,
-        # saving a full 16B/row round trip over the host arrays
-        return np.asarray(_jk()["hash"](keys))
-    return _pk()["hash64"](keys, interpret=impl == "interpret")
+    with _lazy_x64():
+        if impl == "xla":
+            # no host-side cast: the kernel's own astype fuses into the jit,
+            # saving a full 16B/row round trip over the host arrays
+            return np.asarray(_jk()["hash"](keys))
+        return _pk()["hash64"](keys, interpret=impl == "interpret")
 
 
 def partition_ids(keys: np.ndarray, n_partitions: int,
@@ -476,13 +492,14 @@ def partition_ids(keys: np.ndarray, n_partitions: int,
     keys = np.asarray(keys)
     if P == 1:
         return np.zeros(len(keys), np.int64)
-    impl = _active_impl(impl)
+    impl = resolve_impl(impl)
     if impl == "numpy" or keys.size == 0:
         return (_hash64_np(keys) % np.uint64(P)).astype(np.int64)
-    if impl == "xla":
-        return np.asarray(_jk()["pid"](keys, P))
-    pid, _ = _pk()["pid_hist"](keys, P, interpret=impl == "interpret")
-    return pid
+    with _lazy_x64():
+        if impl == "xla":
+            return np.asarray(_jk()["pid"](keys, P))
+        pid, _ = _pk()["pid_hist"](keys, P, interpret=impl == "interpret")
+        return pid
 
 
 def _group_order(pid: np.ndarray, P: int) -> np.ndarray:
@@ -507,10 +524,11 @@ def partition_index(keys: np.ndarray, n_partitions: int,
     n = len(keys)
     if P == 1:
         return np.arange(n, dtype=np.int64), np.asarray([n], np.int64)
-    impl = _active_impl(impl)
+    impl = resolve_impl(impl)
     if impl in ("pallas", "interpret") and n:
-        pid, counts = _pk()["pid_hist"](keys, P,
-                                        interpret=impl == "interpret")
+        with _lazy_x64():
+            pid, counts = _pk()["pid_hist"](keys, P,
+                                            interpret=impl == "interpret")
         return _group_order(pid, P).astype(np.int64, copy=False), counts
     pid = partition_ids(keys, P, impl)
     counts = np.bincount(pid, minlength=P).astype(np.int64)
@@ -536,12 +554,13 @@ def filter_mask(col: np.ndarray, threshold: float,
     compare contract."""
     col = np.asarray(col)
     thr = _pin_threshold(col, threshold)
-    impl = _active_impl(impl)
+    impl = resolve_impl(impl)
     if impl == "numpy" or col.size == 0:
         return col > thr
-    if impl == "xla":
-        return np.asarray(_jk()["cmp"](col, thr))
-    return _pk()["filter_mask"](col, thr, interpret=impl == "interpret")
+    with _lazy_x64():
+        if impl == "xla":
+            return np.asarray(_jk()["cmp"](col, thr))
+        return _pk()["filter_mask"](col, thr, interpret=impl == "interpret")
 
 
 def map_derived(a: np.ndarray, b: np.ndarray | None,
@@ -553,18 +572,19 @@ def map_derived(a: np.ndarray, b: np.ndarray | None,
     whole-table evaluation must agree)."""
     a = np.asarray(a)
     b = None if b is None else np.asarray(b)
-    impl = _active_impl(impl)
+    impl = resolve_impl(impl)
     if impl == "numpy" or a.size == 0:
         if b is None:
             return a / (np.float32(1.0) + np.abs(a))
         return a * np.float32(1.0001) + b / (np.float32(1.0) + np.abs(b))
-    if impl == "xla":
-        k = _jk()
-        if b is None:
-            return np.asarray(k["softsign"](a))
-        # two jit units: XLA would contract the mul into an FMA if fused
-        return np.asarray(k["map_add_softsign"](k["map_mul"](a), b))
-    return _pk()["map_derived"](a, b, interpret=impl == "interpret")
+    with _lazy_x64():
+        if impl == "xla":
+            k = _jk()
+            if b is None:
+                return np.asarray(k["softsign"](a))
+            # two jit units: XLA would contract the mul into an FMA if fused
+            return np.asarray(k["map_add_softsign"](k["map_mul"](a), b))
+        return _pk()["map_derived"](a, b, interpret=impl == "interpret")
 
 
 # ---------------------------------------------------------------------------
@@ -576,18 +596,21 @@ def fixed_point_encode(values: np.ndarray, weights: np.ndarray | None = None,
     """Per-row int64 AGG contribution: ``rint(v * AGG_QUANTUM)`` (times the
     signed Z-set weight when given). Exact: every later addition is integer."""
     values = np.asarray(values)
-    impl = _active_impl(impl)
+    impl = resolve_impl(impl)
     if impl == "numpy" or values.size == 0:
         fp = np.rint(np.asarray(values, np.float64) * AGG_QUANTUM).astype(
             np.int64
         )
         return fp if weights is None else fp * weights
-    if impl == "xla":
-        k = _jk()
-        if weights is None:
-            return np.asarray(k["encode"](values))
-        return np.asarray(k["encode_w"](values, np.asarray(weights, np.int64)))
-    return _pk()["encode"](values, weights, interpret=impl == "interpret")
+    with _lazy_x64():
+        if impl == "xla":
+            k = _jk()
+            if weights is None:
+                return np.asarray(k["encode"](values))
+            return np.asarray(
+                k["encode_w"](values, np.asarray(weights, np.int64))
+            )
+        return _pk()["encode"](values, weights, interpret=impl == "interpret")
 
 
 def _segment_sums_np(contrib_sorted: np.ndarray,
@@ -606,6 +629,7 @@ def group_reduce(
     cols: dict[str, tuple[np.ndarray, str]],
     weights: np.ndarray | None = None,
     impl: str = "auto",
+    stable: bool = False,
 ) -> tuple[np.ndarray, dict[str, np.ndarray], np.ndarray]:
     """Weighted segment reduction over (implicitly sorted) group keys.
 
@@ -615,13 +639,22 @@ def group_reduce(
     Returns ``(sorted unique keys, {name: int64 sums}, counts)`` with
     ``counts`` the per-group sum of ``weights`` (group sizes when None).
 
+    ``stable`` is the caller's declared order sensitivity: the jitted path
+    groups rows with a host sort, and a caller whose per-group accumulation
+    is NOT exactly associative (anything but integer sums) MUST pass
+    ``stable=True`` to pin the within-group row order. ``op_agg`` /
+    ``merge_agg`` accumulate exact int64 fixed-point sums (mod 2^64 addition
+    commutes), so they keep the default unstable sort — the deliberately-
+    unstable perf path carried as the one ``unstable-sort`` baseline entry
+    in ``tools/sc_lint_baseline.json``.
+
     numpy impl is the reference ``np.unique``+``np.add.at`` loop; the
     jax/pallas impls encode and scan through jitted kernels around a host
     sort. Bitwise-equal because the sums are exact integers (mod 2^64) —
     independent of both accumulation order and grouping method.
     """
     keys = np.asarray(keys)
-    impl = _active_impl(impl)
+    impl = resolve_impl(impl)
     if impl == "numpy" or keys.size == 0:
         uniq, inv = np.unique(keys, return_inverse=True)
         n = len(uniq)
@@ -642,26 +675,31 @@ def group_reduce(
                 counts = np.zeros(n, np.int64)
                 np.add.at(counts, inv, weights)
         return uniq, sums, counts
-    # jitted path: host sort for the grouping permutation (unstable is fine —
-    # integer sums commute exactly), jitted encode + cumsum for the sums
-    order = np.argsort(keys)
+    # jitted path: host sort for the grouping permutation (unstable by
+    # default — integer sums commute exactly; see ``stable`` above), jitted
+    # encode + cumsum for the sums
+    if stable:
+        order = np.argsort(keys, kind="stable")
+    else:
+        order = np.argsort(keys)
     sk = keys[order]
     boundary = np.nonzero(sk[1:] != sk[:-1])[0]
     ends = np.concatenate([boundary, [len(sk) - 1]])
     uniq = sk[ends]
-    cum = _jk()["cumsum"]
-    sums = {}
-    for name, (v, kind) in cols.items():
-        contrib = (
-            np.asarray(v, np.int64)
-            if kind == "int"
-            else fixed_point_encode(v, weights, impl=impl)
-        )
-        c = np.asarray(cum(contrib[order]))
-        with np.errstate(over="ignore"):
-            seg = c[ends].copy()
-            seg[1:] -= c[ends[:-1]]
-        sums[name] = seg
+    with _lazy_x64():
+        cum = _jk()["cumsum"]
+        sums = {}
+        for name, (v, kind) in cols.items():
+            contrib = (
+                np.asarray(v, np.int64)
+                if kind == "int"
+                else fixed_point_encode(v, weights, impl=impl)
+            )
+            c = np.asarray(cum(contrib[order]))
+            with np.errstate(over="ignore"):
+                seg = c[ends].copy()
+                seg[1:] -= c[ends[:-1]]
+            sums[name] = seg
     if weights is None:
         starts = np.concatenate([[0], ends[:-1] + 1])
         counts = (ends - starts + 1).astype(np.int64)
@@ -682,7 +720,7 @@ def first_occurrence(keys: np.ndarray,
     sort is the contract (first occurrence in input order); it runs on host
     in every impl."""
     keys = np.asarray(keys)
-    impl = _active_impl(impl)
+    impl = resolve_impl(impl)
     if impl == "numpy" or keys.size == 0:
         order = np.argsort(keys, kind="stable")
         uniq, first = np.unique(keys[order], return_index=True)
@@ -707,7 +745,7 @@ def probe_sorted(uniq: np.ndarray, probe: np.ndarray,
     probe = np.asarray(probe)
     if len(uniq) == 0 or len(probe) == 0:
         return np.zeros(len(probe), bool), np.zeros(len(probe), np.int64)
-    impl = _active_impl(impl)
+    impl = resolve_impl(impl)
     if impl == "numpy":
         pos = np.searchsorted(uniq, probe)
         posc = np.clip(pos, 0, len(uniq) - 1)
@@ -724,9 +762,10 @@ def probe_sorted(uniq: np.ndarray, probe: np.ndarray,
         )
     else:
         uniq_pad = uniq
-    if impl == "xla":
-        hit, pos = _jk()["probe"](uniq_pad, probe, len(uniq))
-        return np.asarray(hit), np.asarray(pos)
-    hit, pos = _pk()["probe"](uniq_pad, probe, len(uniq),
-                              interpret=impl == "interpret")
-    return hit, pos
+    with _lazy_x64():
+        if impl == "xla":
+            hit, pos = _jk()["probe"](uniq_pad, probe, len(uniq))
+            return np.asarray(hit), np.asarray(pos)
+        hit, pos = _pk()["probe"](uniq_pad, probe, len(uniq),
+                                  interpret=impl == "interpret")
+        return hit, pos

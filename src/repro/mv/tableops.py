@@ -624,6 +624,13 @@ def op_agg(table: Table) -> Table:
     so the result is the signed partial aggregate ``merge_agg`` needs.
     Groups whose delta-local count nets to zero are kept — they may still
     carry sum corrections (an update that moved a value but not its key).
+
+    ``stable=False`` is a declared contract, not an omission: every
+    accumulation here is an exact int64 sum (mod 2^64 addition commutes), so
+    the jitted path's grouping sort may legally be unstable — the perf path
+    sc-lint baselines as the one sanctioned ``unstable-sort`` finding. Any
+    future order-sensitive accumulation (floats, first/last, arg-extrema)
+    must flip it to ``stable=True``.
     """
     keys = np.asarray(table["key"])
     w = weights_of(table) if WEIGHT_COL in table else None
@@ -632,7 +639,9 @@ def op_agg(table: Table) -> Table:
         for k in data_cols(table)
         if np.issubdtype(np.asarray(table[k]).dtype, np.number)
     }
-    uniq, sums, counts = dataplane.group_reduce(keys, cols, weights=w)
+    uniq, sums, counts = dataplane.group_reduce(
+        keys, cols, weights=w, stable=False
+    )
     out: Table = {"key": uniq}
     for name, acc in sums.items():
         out[name] = acc.astype(np.float64) / AGG_QUANTUM
@@ -664,7 +673,11 @@ def merge_agg(old: Table, delta: Table) -> Table:
         )
         cols[col] = (np.concatenate([ov, dv]),
                      "int" if col == "count" else "fixed")
-    uniq, sums, _counts = dataplane.group_reduce(keys, cols, weights=None)
+    # stable=False: per-key integer addition is exact, order-insensitive
+    # (the same declared contract as op_agg)
+    uniq, sums, _counts = dataplane.group_reduce(
+        keys, cols, weights=None, stable=False
+    )
     out: Table = {"key": uniq}
     for col, acc in sums.items():
         if col == "count":

@@ -45,6 +45,18 @@ PARTITION_FACTOR = 5.0  # ~5 years of data per partition
 
 OPS = ("SCAN", "FILTER", "PROJECT", "MAP", "JOIN", "AGG", "UNION")
 
+# Operator parameters of the realized compute fns. Module-level (not buried
+# in the closures) so ``mv.ir`` lifts the SAME values the closures execute —
+# one source of truth for closure execution, IR-driven execution, and the
+# static delta-safety passes.
+PROJECT_KEEP_FRAC = 0.6
+
+
+def filter_threshold(i: int) -> float:
+    """FILTER threshold of realized node ``i`` (varied so sibling filters
+    have different selectivities)."""
+    return -0.3 + 0.1 * (i % 7)
+
 # bytes/sec of pure compute per operator on the modeled engine
 OP_THROUGHPUT: dict[str, float] = {
     "SCAN": 3.0e9,
@@ -666,9 +678,9 @@ def realize_workload(workload: Workload, bytes_per_root: int = 1 << 20,
                 return out
             x = inputs[0]
             if op == "FILTER":
-                return T.op_filter(x, threshold=-0.3 + 0.1 * (i % 7))
+                return T.op_filter(x, threshold=filter_threshold(i))
             if op == "PROJECT":
-                return T.op_project(x, keep_frac=0.6)
+                return T.op_project(x, keep_frac=PROJECT_KEEP_FRAC)
             if op == "AGG":
                 return T.op_agg(x)
             return T.op_map(x)

@@ -1,0 +1,107 @@
+"""Plan-feasibility analyzer: counterexample minimality/validity, repair
+equivalence with the planner's historical shed loop, and feasibility of the
+solvers' own output (flat and hierarchical).
+"""
+import pytest
+
+from repro.analysis.plan_check import (
+    Counterexample,
+    check_plan,
+    find_counterexample,
+    repair,
+)
+from repro.core.altopt import serial_plan, solve, solve_hierarchical
+from repro.mv import generate_workload
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generate_workload(n_nodes=24, seed=0).to_graph()
+
+
+def test_feasible_plans_have_no_counterexample(graph):
+    plan = serial_plan(graph)
+    assert find_counterexample(
+        graph, plan.flagged, plan.order, budget=1.0
+    ) is None
+    huge = sum(graph.sizes) * 10
+    assert find_counterexample(
+        graph, range(graph.n), plan.order, huge, n_workers=4
+    ) is None
+
+
+def test_counterexample_witness_properties(graph):
+    order = graph.topological_order()
+    budget = max(graph.sizes) * 0.5
+    flagged = set(range(graph.n))
+    cex = find_counterexample(graph, flagged, order, budget, n_workers=2)
+    assert isinstance(cex, Counterexample)
+    assert cex.resident_bytes > budget
+    # the witness alone already exceeds the budget...
+    wbytes = sum(graph.sizes[i] for i in cex.witness)
+    assert wbytes > budget
+    # ...and is minimal in the greedy largest-first sense: dropping its
+    # smallest member drops below the budget
+    assert wbytes - min(graph.sizes[i] for i in cex.witness) <= budget + 1e-9
+    assert set(cex.in_flight) <= set(cex.witness)
+    assert cex.executing == order[cex.step]
+    msg = cex.describe(graph)
+    assert "budget" in msg and str(cex.n_workers) in msg
+
+
+def test_repair_restores_feasibility_with_trail(graph):
+    order = graph.topological_order()
+    budget = max(graph.sizes) * 0.5
+    flagged = frozenset(range(graph.n))
+    repaired, trail = repair(graph, flagged, order, budget, n_workers=2)
+    assert repaired < flagged
+    assert trail, "an infeasible start must produce a counterexample trail"
+    assert len(trail) == len(flagged) - len(repaired)
+    assert find_counterexample(graph, repaired, order, budget, 2) is None
+
+
+def test_repair_matches_legacy_shed_order(graph):
+    """Victim selection is bit-identical to the loop hierarchical_plan
+    always ran: discard min score-density until feasible."""
+    order = graph.topological_order()
+    budget = max(graph.sizes) * 0.5
+    k = 2
+    legacy = set(range(graph.n))
+    while legacy and not graph.is_feasible(legacy, order, budget, k):
+        legacy.discard(min(
+            legacy,
+            key=lambda i: graph.scores[i] / max(graph.sizes[i], 1e-12),
+        ))
+    repaired, _ = repair(graph, range(graph.n), order, budget, k)
+    assert repaired == frozenset(legacy)
+
+
+def test_check_plan_finding_shape(graph):
+    order = graph.topological_order()
+    budget = max(graph.sizes) * 0.5
+    got = check_plan(graph, range(graph.n), order, budget,
+                     path="plan:test", symbol="k1")
+    assert len(got) == 1
+    f = got[0]
+    assert (f.rule, f.level, f.path, f.symbol) == (
+        "plan-infeasible", "error", "plan:test", "k1"
+    )
+    assert check_plan(graph, (), order, budget) == []
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_flat_solver_output_is_feasible(graph, k):
+    budget = 0.3 * sum(graph.sizes)
+    plan = solve(graph, budget, n_workers=k)
+    assert check_plan(graph, plan.flagged, plan.order, budget, k) == []
+
+
+def test_hierarchical_solver_output_is_feasible(graph):
+    P = 16
+    budget = 0.3 * sum(graph.sizes)
+    pplan = solve_hierarchical(graph, budget, P, n_workers=2)
+    expanded, _ = graph.expand_partitions(P, None)
+    assert check_plan(
+        expanded, pplan.plan.flagged, pplan.plan.order, budget,
+        pplan.plan.n_workers,
+    ) == []

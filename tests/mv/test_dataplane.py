@@ -362,3 +362,73 @@ def test_scenario_matrix_jax_dataplane_bitwise_vs_numpy_reference(impl):
                         verify_partitioned_equivalence(wl, store, P, ref)
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# x64 exception safety, retrace buckets, and the stable-sort contract
+# ---------------------------------------------------------------------------
+
+def test_lazy_x64_restored_when_kernel_raises(monkeypatch):
+    """A broken jitted path must not leak global x64 state: the error
+    propagates AND jax_enable_x64 returns to its prior value."""
+    import jax
+
+    jax.config.update("jax_enable_x64", False)
+
+    def boom():
+        raise RuntimeError("kernel build failed")
+
+    monkeypatch.setattr(dp, "_jk", boom)
+    with dp.use_impl("jax"):
+        with pytest.raises(RuntimeError, match="kernel build failed"):
+            dp.hash64(np.arange(4, dtype=np.int64))
+        assert not bool(jax.config.jax_enable_x64)
+    assert not bool(jax.config.jax_enable_x64)
+
+
+def test_lazy_x64_stays_enabled_on_success():
+    import jax
+
+    with dp.use_impl("jax"):
+        dp.hash64(np.arange(4, dtype=np.int64))
+        # lazy: left enabled so later primitives pay nothing
+        assert bool(jax.config.jax_enable_x64)
+    # use_impl's own exit restores the pre-context state
+
+
+def test_probe_one_trace_per_pow2_bucket():
+    """n_real is traced, so every uniq length inside one power-of-two pad
+    bucket shares a single compiled probe (the historical static-argnums
+    version retraced per distinct length)."""
+    probe = np.array([2, 9, 64], dtype=np.int64)
+    with dp.use_impl("jax"):
+        kernel = dp._jk()["probe"]
+        if not hasattr(kernel, "_cache_size"):
+            pytest.skip("jax version without _cache_size introspection")
+        before = kernel._cache_size()
+        for n in (5, 6, 7):  # all pad to 8
+            uniq = np.arange(n, dtype=np.int64) * 2
+            hit, pos = dp.probe_sorted(uniq, probe)
+            ref_hit, ref_pos = dp.probe_sorted(uniq, probe, impl="numpy")
+            assert np.array_equal(hit, ref_hit)
+            assert np.array_equal(pos, ref_pos)
+        assert kernel._cache_size() - before <= 1
+
+
+def test_group_reduce_stable_flag_bitwise_equal_for_int_sums():
+    """op_agg's declared contract: exact int64 sums commute, so the unstable
+    grouping sort and the pinned stable sort give bitwise-equal results."""
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 50, size=4000).astype(np.int64)
+    vals = rng.normal(size=4000).astype(np.float32)
+    w = rng.integers(-3, 4, size=4000).astype(np.int64)
+    with dp.use_impl("jax"):
+        a = dp.group_reduce(keys, {"s": (vals, "fixed")}, w, stable=False)
+        b = dp.group_reduce(keys, {"s": (vals, "fixed")}, w, stable=True)
+    for x, y in zip(a, b):
+        if isinstance(x, dict):
+            assert set(x) == set(y)
+            for name in x:
+                assert np.array_equal(x[name], y[name])
+        else:
+            assert np.array_equal(x, y)

@@ -1,0 +1,158 @@
+"""Operator IR (mv/ir.py): lifting, schema inference, and the round-trip
+contract — IR-compiled execution is bitwise identical to closure execution
+across the scenario matrix (seeds x update kinds x worker counts), for both
+flat and partitioned workloads.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CostModel
+from repro.core.altopt import serial_plan
+from repro.mv import (
+    DiskStore,
+    UpdateSpec,
+    calibrate_sizes,
+    generate_workload,
+    realize_workload,
+    run_scenario,
+    verify_scenario_equivalence,
+)
+from repro.mv import ir as mvir
+from repro.mv import tableops as T
+from repro.mv.executor import Controller
+from repro.mv.partition import partition_workload
+from repro.mv.workloads import PROJECT_KEEP_FRAC, filter_threshold
+
+CM = CostModel(
+    disk_read_bw=50e6,
+    disk_write_bw=50e6,
+    mem_read_bw=1e12,
+    mem_write_bw=1e12,
+    disk_latency=0.0,
+)
+
+
+def build(tmp_path, n_nodes=10, seed=3, bytes_per_root=1 << 13):
+    wl = realize_workload(
+        generate_workload(n_nodes=n_nodes, seed=seed),
+        bytes_per_root=bytes_per_root,
+    )
+    return calibrate_sizes(wl, DiskStore(tmp_path / "calib"))
+
+
+# ---------------------------------------------------------------------------
+# lifting
+# ---------------------------------------------------------------------------
+
+def test_lift_recovers_ops_params_and_structure(tmp_path):
+    wl = build(tmp_path, seed=3)
+    ir = mvir.lift_workload(wl)
+    assert ir.n == len(wl.nodes)
+    for i, (node, orig) in enumerate(zip(ir.nodes, wl.nodes)):
+        assert node.name == orig.name
+        assert node.op == orig.op
+        assert node.parents == tuple(orig.parents)
+        assert node.lifted, f"{orig.name} ({orig.op}) not lifted"
+        if orig.op == "FILTER":
+            assert node.param("threshold") == filter_threshold(i)
+        if orig.op == "PROJECT":
+            assert node.param("keep_frac") == PROJECT_KEEP_FRAC
+    # make_fn fallthrough contract mirrored
+    for node in ir.nodes:
+        if node.op in ("JOIN", "UNION") and len(node.parents) < 2:
+            assert node.effective_op == "MAP"
+
+
+def test_lift_partitioned_records_partition_ids(tmp_path):
+    wl = build(tmp_path, n_nodes=8, seed=1)
+    pwl, _ = partition_workload(wl, 4)
+    ir = mvir.lift_workload(pwl)
+    assert ir.n_partitions == 4
+    assert all(n.lifted for n in ir.nodes)
+    parts = [n.partition for n in ir.nodes]
+    assert set(parts) == {0, 1, 2, 3}
+    # partition_workload lays nodes out as v*P + p
+    assert parts == [i % 4 for i in range(ir.n)]
+
+
+# ---------------------------------------------------------------------------
+# schema inference: exact against executed tables
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [1, 4])
+def test_inferred_schemas_match_executed_tables(tmp_path, P):
+    wl = build(tmp_path, n_nodes=8, seed=5)
+    if P > 1:
+        wl, _ = partition_workload(wl, P)
+    ir = mvir.infer_schemas(mvir.lift_workload(wl))
+    store = DiskStore(tmp_path / f"exec{P}")
+    Controller(wl, store, budget_bytes=0.0).run(serial_plan(wl.to_graph()))
+    for node in ir.nodes:
+        got = mvir.Schema.from_table(store.read(node.name))
+        assert node.schema == got, node.name
+
+
+# ---------------------------------------------------------------------------
+# round trip: IR-compiled closures are bitwise identical to the originals
+# ---------------------------------------------------------------------------
+
+def _roundtrip_scenario(tmp_path, wl, spec_kw, k=1):
+    irwl = mvir.to_workload(mvir.infer_schemas(mvir.lift_workload(wl)), wl)
+    assert irwl.name == wl.name + "_ir"
+    budget = sum(n.size for n in wl.nodes) * 0.4
+    stores = {}
+    for tag, w in (("orig", wl), ("ir", irwl)):
+        store = DiskStore(tmp_path / tag)
+        stores[tag] = store
+        run_scenario(
+            w, store, budget, UpdateSpec(mode="incremental", **spec_kw),
+            CM, n_compute_workers=k,
+        )
+    # node names are shared, so the bitwise verifier compares pairwise
+    verify_scenario_equivalence(wl, stores["orig"], stores["ir"])
+
+
+@pytest.mark.parametrize("seed,kind,k", [
+    (3, "insert", 1),
+    (3, "mixed", 2),
+    (7, "insert", 2),
+    (7, "mixed", 1),
+    (11, "delete", 1),
+])
+def test_ir_roundtrip_bitwise_scenario_matrix(tmp_path, seed, kind, k):
+    spec_kw = {
+        "insert": dict(ingest_frac=0.3, n_rounds=2),
+        "mixed": dict(
+            ingest_frac=0.25, update_frac=0.2, delete_frac=0.1, n_rounds=2
+        ),
+        "delete": dict(ingest_frac=0.2, delete_frac=0.3, n_rounds=2),
+    }[kind]
+    wl = build(tmp_path, seed=seed)
+    _roundtrip_scenario(tmp_path, wl, spec_kw, k=k)
+
+
+def test_ir_roundtrip_bitwise_partitioned(tmp_path):
+    wl = build(tmp_path, n_nodes=8, seed=2)
+    pwl, _ = partition_workload(wl, 4)
+    _roundtrip_scenario(
+        tmp_path, pwl, dict(ingest_frac=0.3, n_rounds=2), k=2
+    )
+
+
+def test_compile_node_matches_closure_on_one_table(tmp_path):
+    """Direct single-op check, no scenario machinery: compiled fn and the
+    original closure produce bitwise-identical tables on real input."""
+    wl = build(tmp_path, seed=4)
+    ir = mvir.infer_schemas(mvir.lift_workload(wl))
+    store = DiskStore(tmp_path / "exec")
+    Controller(wl, store, budget_bytes=0.0).run(serial_plan(wl.to_graph()))
+    checked = 0
+    for node, orig in zip(ir.nodes, wl.nodes):
+        if node.op == "SCAN" or not node.lifted or orig.fn is None:
+            continue
+        inputs = [store.read(wl.nodes[p].name) for p in node.parents]
+        T.assert_tables_bitwise(
+            mvir.compile_node(node)(inputs), orig.fn(inputs), node.name
+        )
+        checked += 1
+    assert checked > 0

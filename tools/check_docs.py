@@ -1,6 +1,6 @@
 """Intra-repo link checker for the documentation (CI docs job).
 
-    python tools/check_docs.py README.md DESIGN.md
+    python tools/check_docs.py README.md DESIGN.md ROADMAP.md
 
 Validates every markdown link target and every backtick-quoted repo path
 in the given files:
@@ -11,7 +11,9 @@ in the given files:
   ``#fragment`` is stripped first).
 * `` `path/to/file.py` `` backtick references that *look like* repo paths
   (contain a ``/`` and end in a known source/doc extension) must exist —
-  this is what catches docs drifting behind file renames.
+  this is what catches docs drifting behind file renames. A path resolves
+  against the repo root or ``src/repro`` (ROADMAP/DESIGN shorthand writes
+  ``mv/dataplane.py`` for ``src/repro/mv/dataplane.py``).
 
 Exits non-zero listing every broken reference.
 """
@@ -26,6 +28,12 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 TICK_RE = re.compile(r"`([^`\s]+)`")
 PATH_SUFFIXES = (".py", ".md", ".yml", ".yaml", ".toml", ".json", ".txt")
 EXTERNAL = ("http://", "https://", "mailto:")
+# package-relative shorthand roots docs are allowed to write paths against
+PATH_ROOTS = (REPO, REPO / "src" / "repro")
+
+
+def _path_exists(base: str) -> bool:
+    return any((root / base).exists() for root in PATH_ROOTS)
 
 
 def check_file(md: Path) -> list[str]:
@@ -50,13 +58,15 @@ def check_file(md: Path) -> list[str]:
                 continue
             if any(c in base for c in "()*{}$<>="):
                 continue
-            if not (REPO / base).exists():
+            if not _path_exists(base):
                 errors.append(f"{md.name}:{lineno}: missing path -> {ref}")
     return errors
 
 
 def main(argv: list[str]) -> int:
-    files = [Path(a) for a in argv] or [REPO / "README.md", REPO / "DESIGN.md"]
+    files = [Path(a) for a in argv] or [
+        REPO / "README.md", REPO / "DESIGN.md", REPO / "ROADMAP.md",
+    ]
     all_errors: list[str] = []
     for md in files:
         if not md.exists():
