@@ -39,6 +39,7 @@ def _modules():
         fig13_opttime,
         fig14_sweep,
         incremental,
+        mqo_bench,
         parallel_sweep,
         partition_sweep,
         planner_scale,
@@ -59,6 +60,7 @@ def _modules():
         ("partition_sweep", partition_sweep.run),
         ("planner_scale", planner_scale.run),
         ("incremental", incremental.run),
+        ("mqo_bench", mqo_bench.run),
         ("fig13_opttime", fig13_opttime.run),
         ("fig14_sweep", fig14_sweep.run),
         ("real_executor", real_executor.run),
@@ -82,8 +84,13 @@ def _modules():
 # tableops_bench (smoke mode) is the data-plane parity gate: every ported
 # operator must be bitwise-equal across numpy / jitted-XLA / interpret-mode
 # Pallas, asserted in-run (DESIGN.md §9).
+# mqo_bench asserts the shared-subexpression acceptance claims (DESIGN.md
+# §11): each shared subtree refreshes exactly once per round, merged output
+# bitwise-identical to unshared, >= 1.3x refresh speedup at k=1, and the
+# shared intermediates earn Memory Catalog residency under default budget.
 SMOKE_MODULES = [
-    "incremental", "partition_sweep", "planner_scale", "tableops_bench",
+    "incremental", "mqo_bench", "partition_sweep", "planner_scale",
+    "tableops_bench",
 ]
 
 

@@ -17,6 +17,13 @@ Bug 2 — ``_filter_mask`` static threshold. The filter compare was jitted
 with its float threshold in ``static_argnums``: every distinct threshold
 value (one per FILTER node) triggered a full retrace. Fix: the threshold
 is traced (``_jk``'s ``cmp``), pinned to the column dtype on the host.
+
+Forged merge — the MQO hazard ``analysis.mqo_check`` exists to catch
+(DESIGN.md §11): two views whose "shared" FILTER prefix differs only in a
+captured threshold, with the merge provenance tampered to claim they are
+one equivalence class. ``forged_threshold_merge`` hand-builds that
+``MergedWorkload``; ``genuine_shared_prefix_merge`` is the quiet
+counterpart (a real ``merge_workload`` result the pass must not flag).
 """
 from __future__ import annotations
 
@@ -25,6 +32,8 @@ import textwrap
 __all__ = [
     "LEGACY_FILTER_MASK_SRC",
     "SHIPPED_FILTER_MASK_SRC",
+    "forged_threshold_merge",
+    "genuine_shared_prefix_merge",
     "legacy_fused_map",
     "shipped_map_kernels",
 ]
@@ -78,3 +87,69 @@ def shipped_map_kernels():
 
     k = _jk()
     return k["map_mul"], k["map_add_softsign"]
+
+
+def forged_threshold_merge():
+    """A tampered ``MergedWorkload``: two FILTERs over the same scan whose
+    captured thresholds differ (node indices 1 and 2 are not congruent
+    mod 7, so ``filter_threshold`` gives each a distinct value), forged to
+    claim a single equivalence class. ``mqo_check.check_merged`` must emit
+    ``unsound-merge`` on it."""
+    import dataclasses as dc
+
+    from ..mv import ir as mvir
+    from ..mv.mqo import MergedWorkload, node_fingerprints
+    from ..mv.workloads import MVNode, Workload
+
+    wl = Workload(name="forged_prefix", nodes=[
+        MVNode("scan", (), "SCAN", 1e6, 0.0, base_read=1e6),
+        MVNode("a_filter", (0,), "FILTER", 7e5, 1e-4),
+        MVNode("b_filter", (0,), "FILTER", 7e5, 1e-4),
+        MVNode("a_view", (1,), "MAP", 7e5, 1e-4),
+        MVNode("b_view", (2,), "MAP", 7e5, 1e-4),
+    ])
+    ir = mvir.infer_schemas(mvir.lift_workload(wl))
+    fps = list(node_fingerprints(ir))
+
+    # The forgery: claim b_filter computes what a_filter computes and
+    # rewire b_view onto the "shared" representative.
+    fps[2] = fps[1]
+    rep_of = (0, 1, 1, 3, 4)
+    keep = (0, 1, 3, 4)
+    new_index = {0: 0, 1: 1, 3: 2, 4: 3}
+    nodes, ir_nodes = [], []
+    for orig in keep:
+        n = wl.nodes[orig]
+        parents = tuple(new_index[rep_of[p]] for p in n.parents)
+        nodes.append(dc.replace(n, parents=parents))
+        ir_nodes.append(dc.replace(ir.nodes[orig], parents=parents))
+    merged_wl = Workload(name="forged_prefix_mqo", nodes=nodes)
+    merged_ir = dc.replace(
+        ir, nodes=tuple(ir_nodes), name=merged_wl.name
+    )
+    return MergedWorkload(
+        source=wl,
+        workload=merged_wl,
+        ir=merged_ir,
+        fingerprints=tuple(fps),
+        rep_of=rep_of,
+        keep=keep,
+        name_map={
+            "scan": "scan", "a_filter": "a_filter",
+            "b_filter": "a_filter", "a_view": "a_view",
+            "b_view": "b_view",
+        },
+        shared=("a_filter",),
+        classes={
+            "scan": (0,), "a_filter": (1, 2),
+            "a_view": (3,), "b_view": (4,),
+        },
+    )
+
+
+def genuine_shared_prefix_merge():
+    """The quiet counterpart: an honest ``merge_workload`` over the
+    shared-prefix MQO workload. The soundness pass must report nothing."""
+    from ..mv.mqo import merge_workload, shared_prefix_workload
+
+    return merge_workload(shared_prefix_workload(n_views=2))

@@ -30,6 +30,17 @@ Three entry points share it:
 * ``solve_hierarchical`` — the decomposed partition-granular solve that
   stays fast at large ``n·P``, exact-fallback below ``FLAT_THRESHOLD``
   and always at P=1, DESIGN.md §8.
+
+MQO-merged graphs (``mv.mqo``, DESIGN.md §11) need no special casing here:
+merging rewires every consumer of a shared subexpression onto one
+representative node, so the representative arrives with its fan-out already
+multiplied into ``n_children`` — ``speedup.score_graph`` prices each extra
+consumer as one more saved disk read, and the MKP sees a shared
+intermediate as exactly the high-score, long-residency-window candidate the
+paper's objective says it is. The solvers' only obligations stay what they
+were: feasibility under the budget and a topological order (the merged
+graph is still a DAG — representatives are minimum-index class members, so
+parents precede children).
 """
 from __future__ import annotations
 

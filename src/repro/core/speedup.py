@@ -222,6 +222,7 @@ def propagate_update(
     update_frac: float = 0.0,
     delete_frac: float = 0.0,
     join_fallback_rate: float = 1.0,
+    force_full: frozenset[int] | set[int] = frozenset(),
 ) -> UpdateRound:
     """Propagate a Z-set update round through the DAG (DESIGN.md §5-6).
 
@@ -247,6 +248,13 @@ def propagate_update(
     ``RoundReport.fallback_stats``); the default 1.0 is the uncalibrated
     worst case — every affected key corrects. Statuses are rate-independent:
     a round that *could* emit corrections stays DELTA even at rate 0.
+
+    ``force_full`` marks individual non-scan nodes for full recomputation
+    this round regardless of the global mode — the per-view adaptive
+    chooser (``choose_refresh_modes``) feeds its decisions through here so
+    the planner prices exactly the refresh the engine will run. A forced
+    node is REPLACED and its children recompute fully, same as under
+    ``mode="full"``.
     """
     n = len(ops)
     if round_idx < 1:
@@ -313,6 +321,7 @@ def propagate_update(
         any_retract = any(statuses[p] == DELTA for p in ps)
         forced_full = (
             mode == "full"
+            or v in force_full
             or any(statuses[p] == REPLACED for p in ps)
             or (ops[v] == "UNION" and len(ps) >= 2
                 and not all(has_rid[p] for p in ps))
@@ -382,3 +391,84 @@ def propagate_update(
         full_sizes=tuple(full_at(v, round_idx) for v in range(n)),
         lineage=tuple(phi),
     )
+
+
+def choose_refresh_modes(
+    ops: Sequence[str],
+    parents: Sequence[Sequence[int]],
+    sizes: Sequence[float],
+    computes: Sequence[float],
+    base_reads: Sequence[float],
+    ingest: frozenset[int] | set[int],
+    frac: float,
+    cost_model: CostModel,
+    round_idx: int = 1,
+    update_frac: float = 0.0,
+    delete_frac: float = 0.0,
+    join_fallback_rate: float = 1.0,
+    margin: float = 0.9,
+) -> frozenset[int]:
+    """Per-view full-vs-incremental choice from modeled round costs
+    (Enzyme-style adaptive maintenance, DESIGN.md §11).
+
+    For every node an incremental round would refresh by delta, compare the
+    modeled cost of its delta refresh (read parent updates + historical
+    re-reads + incremental compute + write the delta — plus, for a JOIN
+    expecting partial-fallback corrections, the old-left gather the runtime
+    fallback pays) against the cost of recomputing it fully. Nodes where
+    full is cheaper than ``margin`` × incremental are returned for
+    ``propagate_update(force_full=...)`` / the engine's per-round force
+    set. ``margin < 1`` is hysteresis: incremental keeps the benefit of the
+    doubt, so decisions do not flip on modeling noise.
+
+    ``join_fallback_rate`` is the calibrated (EWMA) observed fallback rate —
+    the signal that makes this adaptive: a churn spike raises the JOIN
+    correction terms, full recompute wins for a few rounds, and as the EWMA
+    decays the node returns to incremental. Decisions are performance-only:
+    both refresh paths are bitwise-identical by the engine's equivalence
+    contract, so a wrong choice costs time, never correctness.
+    """
+    kw = dict(
+        round_idx=round_idx, update_frac=update_frac,
+        delete_frac=delete_frac, join_fallback_rate=join_fallback_rate,
+    )
+    inc = propagate_update(
+        ops, parents, sizes, computes, base_reads, ingest, frac,
+        mode="incremental", **kw,
+    )
+    full = propagate_update(
+        ops, parents, sizes, computes, base_reads, ingest, frac,
+        mode="full", **kw,
+    )
+    cm = cost_model
+    forced: set[int] = set()
+    for v in range(len(ops)):
+        ps = parents[v]
+        if not ps or inc.statuses[v] not in CHANGED:
+            continue  # scans ingest identically; STATIC/REPLACED have no choice
+        inc_cost = (
+            cm.read_disk(sum(inc.update_bytes[p] for p in ps))
+            + cm.read_base(inc.extra_read[v])
+            + inc.compute[v]
+            + cm.write_disk(inc.update_bytes[v])
+        )
+        if ops[v] == "JOIN" and len(ps) >= 2:
+            left, rights = ps[0], ps[1:]
+            corr = max(min(join_fallback_rate, 1.0), 0.0) * sum(
+                inc.update_bytes[p] / max(inc.full_sizes[p], 1.0)
+                for p in rights
+                if inc.statuses[p] == DELTA
+            )
+            if corr > 0.0:
+                # the runtime partial fallback re-reads the old left content
+                # once (memoized) to re-join affected rows
+                inc_cost += cm.read_disk(inc.full_sizes[left])
+        full_cost = (
+            cm.read_disk(sum(full.update_bytes[p] for p in ps))
+            + cm.read_base(full.extra_read[v])
+            + full.compute[v]
+            + cm.write_disk(full.update_bytes[v])
+        )
+        if full_cost < margin * inc_cost:
+            forced.add(v)
+    return frozenset(forced)

@@ -60,7 +60,44 @@ from ..core.speedup import APPENDED, CHANGED, DELTA, REPLACED, STATIC, CostModel
 from . import tableops as T
 from .engine import RunReport, SimReport, ThreadedEngine, _RunState, simulate_events
 from .storage import DiskStore
-from .workloads import UpdateSpec, Workload, incremental_view
+from .workloads import (
+    UpdateSpec,
+    Workload,
+    adaptive_force_full,
+    incremental_view,
+)
+
+
+class FallbackRateEwma:
+    """EWMA estimator of the observed JOIN partial-fallback rate (the
+    fraction of affected right-delta keys that actually matched surviving
+    old-left rows). Same estimator shape as the straggler EWMA in
+    ``runtime.ft.StragglerDetector.observe`` — first observation seeds the
+    average, later ones fold in with weight ``alpha`` — replicated here
+    rather than imported because ``runtime.ft`` pulls in jax. A cumulative
+    ratio would let one early high-churn round bias the correction-cost
+    estimate for the rest of a long scenario; the EWMA recovers within a
+    few rounds (``tests/mv/test_incremental.py``). Rounds with no affected
+    keys carry no signal and leave the estimate untouched."""
+
+    def __init__(self, alpha: float = 0.5):
+        self.alpha = alpha
+        self._avg: float | None = None
+
+    def observe(self, affected: int, matched: int) -> None:
+        if affected <= 0:
+            return
+        r = matched / affected
+        self._avg = (
+            r if self._avg is None
+            else self.alpha * r + (1.0 - self.alpha) * self._avg
+        )
+
+    @property
+    def rate(self) -> float:
+        """Calibrated rate for the next round's planner (1.0 — the
+        uncalibrated worst case — until the first observation)."""
+        return 1.0 if self._avg is None else self._avg
 
 
 # ---------------------------------------------------------------------------
@@ -88,14 +125,17 @@ class IncrementalEngine(ThreadedEngine):
         self.schemas: dict[str, dict[str, np.dtype]] = {}
         self._parts0: dict[str, int] = {}
         self._static: frozenset[int] = frozenset()
+        self._force_full: frozenset[int] = frozenset()
         self._fb_lock = threading.Lock()
         self.join_fallbacks = 0
         self.fb_affected = 0  # right-delta keys whose PK mapping changed
         self.fb_matched = 0   # ... that actually matched old-left rows
 
-    def configure_round(self, round_idx: int, static: Sequence[int] = ()) -> None:
+    def configure_round(self, round_idx: int, static: Sequence[int] = (),
+                        force_full: Sequence[int] = ()) -> None:
         self.round_idx = round_idx
         self._static = frozenset(static)
+        self._force_full = frozenset(force_full)
         self.statuses = {v: STATIC for v in self._static}
         self._parts0 = {
             n.name: self.store.parts(n.name) for n in self.workload.nodes
@@ -109,8 +149,12 @@ class IncrementalEngine(ThreadedEngine):
         is durable, rewrite any MV whose tombstone-debt estimate exceeds
         ``consolidate_ratio`` × live bytes as its single live part. Runs
         inside the round's timed window on the throttled store, so the
-        consolidation I/O is charged into that round's plan."""
-        if self.consolidate_ratio is None or self.round_idx == 0:
+        consolidation I/O is charged into that round's plan. Round 0 is not
+        exempt: a retraction-heavy initial load can already breach the
+        ratio, and skipping it would carry that debt into round 1's timed
+        window — the ``parts > 1`` guard below is the real precondition
+        (consolidation needs old content to fold the tombstones into)."""
+        if self.consolidate_ratio is None:
             return 0
         count = 0
         for node in self.workload.nodes:
@@ -139,7 +183,8 @@ class IncrementalEngine(ThreadedEngine):
             self._publish_delta(v, node.delta_fn(r, self.spec), rt)
             return time.perf_counter() - tn0
         pstat = [self.statuses[p] for p in node.parents]
-        if r == 0 or self.spec.mode == "full" or REPLACED in pstat:
+        if r == 0 or self.spec.mode == "full" or v in self._force_full \
+                or REPLACED in pstat:
             self._refresh_full(v, rt)
         else:
             self._refresh_delta(v, rt)
@@ -352,9 +397,14 @@ class RoundReport:
     sizes: tuple[float, ...] = ()
     # observed JOIN partial-fallback profile of this round: ``affected``
     # right-delta keys whose PK mapping changed, ``matched`` of those that
-    # actually hit old-left rows, and the ``rate_used`` the round's planner
-    # fed into the correction-cost term (calibrated from prior rounds)
+    # actually hit old-left rows (both per-round counts), ``rate_used`` the
+    # rate this round's planner fed into the correction-cost term, and
+    # ``rate_ewma`` the estimator state after folding this round in
+    # (``FallbackRateEwma`` — what the *next* round will use)
     fallback_stats: dict | None = None
+    # names the adaptive chooser forced to full recompute this round
+    # (mode="adaptive" only; empty otherwise)
+    forced_full: tuple[str, ...] = ()
 
     @property
     def elapsed(self) -> float:
@@ -408,10 +458,13 @@ def run_scenario(
     ``static_fn(round_idx, view_static) -> extra static node ids`` adds
     data-dependent skips on top of the analytic view's STATIC statuses —
     the partition layer prunes clean partitions with it. The JOIN
-    correction-cost term is calibrated per round from the engine's observed
-    partial-fallback rates (``RoundReport.fallback_stats``), and
-    ``consolidate_ratio`` arms the tombstone consolidation scheduler
-    (``IncrementalEngine._finalize_run``).
+    correction-cost term is calibrated per round from an EWMA of the
+    engine's observed partial-fallback rates (``FallbackRateEwma``,
+    ``RoundReport.fallback_stats``), ``spec.mode="adaptive"`` additionally
+    lets that calibrated model force individual views to full recompute on
+    rounds where the delta path is the loser (``RoundReport.forced_full``,
+    DESIGN.md §11), and ``consolidate_ratio`` arms the tombstone
+    consolidation scheduler (``IncrementalEngine._finalize_run``).
 
     ``solve_fn(graph, budget, n_workers) -> Plan`` overrides the per-round
     planner (it must return a plan feasible at ``n_workers``); the
@@ -431,9 +484,10 @@ def run_scenario(
         consolidate_ratio=consolidate_ratio,
     )
     rounds: list[RoundReport] = []
-    fb_affected = fb_matched = 0  # cumulative observed fallback profile
+    fb_ewma = FallbackRateEwma()  # observed fallback-rate estimator
     for r in range(spec.n_rounds + 1):
-        rate_used = 1.0
+        rate_used = fb_ewma.rate
+        force_full: frozenset[int] = frozenset()
         if r == 0:
             view = workload
             sizes = [float(n.size) for n in workload.nodes]
@@ -446,12 +500,22 @@ def run_scenario(
             # manifest sizes already include all growth up to round r-1, so
             # the view is evaluated one round ahead of *current* sizes
             # (round_idx=1) rather than compounding growth from round 0.
-            # The JOIN correction term uses the fallback rate observed over
-            # the rounds executed so far (1.0 until the first observation).
-            if fb_affected:
-                rate_used = fb_matched / fb_affected
+            # The JOIN correction term uses the EWMA of the per-round
+            # fallback rates observed so far (1.0 until the first
+            # observation) — a single churn spike decays instead of biasing
+            # every later round the way a cumulative ratio would.
+            if spec.mode == "adaptive":
+                # Enzyme-style per-view choice: nodes whose modeled delta
+                # refresh costs more than recomputing them outright (under
+                # the calibrated fallback rate) run full this round — the
+                # planner prices the same decision via the view below.
+                force_full = adaptive_force_full(
+                    workload, spec, cost_model, 1, sizes=sizes,
+                    fallback_rate=rate_used,
+                )
             view = incremental_view(
-                workload, spec, 1, sizes=sizes, fallback_rate=rate_used
+                workload, spec, 1, sizes=sizes, fallback_rate=rate_used,
+                force_full=force_full,
             )
         g = view.to_graph(cost_model)
         if not optimize:
@@ -464,10 +528,9 @@ def run_scenario(
         static = frozenset(i for i, s in enumerate(statuses) if s == STATIC)
         if static_fn is not None:
             static = static | frozenset(static_fn(r, static))
-        engine.configure_round(r, sorted(static))
+        engine.configure_round(r, sorted(static), sorted(force_full))
         rep = engine.run(plan)
-        fb_affected += engine.fb_affected
-        fb_matched += engine.fb_matched
+        fb_ewma.observe(engine.fb_affected, engine.fb_matched)
         rounds.append(
             RoundReport(
                 round_idx=r,
@@ -484,6 +547,10 @@ def run_scenario(
                     affected=engine.fb_affected,
                     matched=engine.fb_matched,
                     rate_used=rate_used,
+                    rate_ewma=fb_ewma.rate,
+                ),
+                forced_full=tuple(
+                    workload.nodes[v].name for v in sorted(force_full)
                 ),
             )
         )

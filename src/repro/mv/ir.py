@@ -30,9 +30,13 @@ them into an explicit, schema-typed operator DAG:
   scenario matrix). SCAN ingestion is data, not view logic: scans keep
   their original ``delta_fn``.
 
-The static passes in ``repro.analysis`` consume this IR; the ROADMAP's
-shared-subexpression delta compilation (MQO) will compile per-view delta
-programs from it.
+The static passes in ``repro.analysis`` consume this IR, and ``mv.mqo``
+builds on it: structural fingerprints over ``OpNode``s detect common
+subexpressions across MV definitions, and the merged workload's nodes run
+``compile_node`` programs instead of per-closure interpretation. Compiled
+closures capture the same ``i`` / ``op`` free variables as
+``realize_workload.make_fn`` (``param_src`` provenance), so a compiled or
+merged workload re-lifts into the IR and stays statically analyzable.
 """
 from __future__ import annotations
 
@@ -126,6 +130,10 @@ class OpNode:
     size: float = 0.0            # modeled/calibrated output bytes
     lifted: bool = True          # False: closure not recognized, kept opaque
     partition: int | None = None  # partition id when lifted from a P-way wl
+    # index the closure derived its parameters from (``make_fn``'s captured
+    # ``i``); None when the node was not lifted. ``compile_node`` re-captures
+    # it so compiled programs round-trip through ``lift_workload``.
+    param_src: int | None = None
 
     def param(self, key: str, default=None):
         for k, v in self.params:
@@ -257,6 +265,7 @@ def lift_workload(workload: Workload) -> ViewIR:
             size=float(n.size),
             lifted=bool(lifted or (n.fn is None and n.op != "SCAN")),
             partition=partition,
+            param_src=node_i if lifted else None,
         ))
     return ViewIR(
         nodes=tuple(nodes), name=workload.name, n_partitions=n_partitions
@@ -303,11 +312,22 @@ def infer_schemas(
 # IR-driven execution (the round trip back to tableops)
 # ---------------------------------------------------------------------------
 
-def compile_node(node: OpNode, delta_fn: Callable | None = None) -> Callable:
+def compile_node(
+    node: OpNode,
+    delta_fn: Callable | None = None,
+    param_index: int | None = None,
+) -> Callable:
     """Compile one ``OpNode`` to ``fn(inputs) -> Table``, applying the same
     ``tableops`` calls in the same order as ``realize_workload.make_fn`` —
     including its JOIN/UNION unary fallthrough — so the compiled DAG is
-    bitwise-identical to the closure it was lifted from."""
+    bitwise-identical to the closure it was lifted from.
+
+    ``param_index`` (usually ``node.param_src``) makes the compiled closure
+    *re-liftable*: it captures the same ``i`` / ``op`` free variables as
+    ``make_fn``, so ``lift_workload`` recognizes compiled programs — merged
+    MQO workloads stay analyzable by the static passes. The claim is made
+    only when the node's params match what a re-lift would derive from that
+    index (a hand-edited IR must not re-lift into wrong parameters)."""
     op = node.op
     if op == "SCAN" or not node.parents:
         if delta_fn is None:
@@ -318,8 +338,15 @@ def compile_node(node: OpNode, delta_fn: Callable | None = None) -> Callable:
     threshold = node.param("threshold", 0.0)
     col = node.param("col", "c0")
     keep_frac = node.param("keep_frac", 0.5)
+    i = param_index
+    if i is not None and (
+        (op == "FILTER" and (threshold != filter_threshold(i) or col != "c0"))
+        or (op == "PROJECT" and keep_frac != PROJECT_KEEP_FRAC)
+    ):
+        i = None  # params diverge from the index: drop the re-lift claim
 
     def fn(inputs):
+        _ = i  # free-variable capture: lift_workload re-lifts compiled nodes
         if op == "JOIN" and len(inputs) >= 2:
             out = inputs[0]
             for other in inputs[1:]:
@@ -356,7 +383,9 @@ def to_workload(ir: ViewIR, workload: Workload) -> Workload:
     for node, orig in zip(ir.nodes, workload.nodes):
         if node.op != "SCAN" and orig.parents and node.lifted and \
                 orig.fn is not None:
-            nodes.append(dataclasses.replace(orig, fn=compile_node(node)))
+            nodes.append(dataclasses.replace(
+                orig, fn=compile_node(node, param_index=node.param_src)
+            ))
         else:
             nodes.append(orig)
     return Workload(

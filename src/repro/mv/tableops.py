@@ -133,9 +133,14 @@ def n_rows(table: Table) -> int:
 # Memoized weight-column live-row sums: the catalog admission path sizes the
 # same resident delta repeatedly (feasibility probes, try_put, append), and
 # each ``weighted_nbytes`` call re-clipped and re-summed the weight column.
-# Keyed by the weight array's identity, validated by weakref (the finalizer
-# callback removes the entry before the id can be recycled), bounded.
-_LIVE_ROWS_CACHE: dict[int, tuple[weakref.ref, int]] = {}
+# Keyed by the weight array's id(), which CPython recycles: after the array
+# is collected, a *different* array can be allocated at the same address
+# before the weakref finalizer has evicted the entry. A hit is therefore
+# only trusted when the stored weakref still resolves to the probing array
+# AND its recorded shape/dtype match — identity alone is not enough, since
+# the dead-ref window is exactly when id() lies. Stale entries found on
+# probe are evicted eagerly.
+_LIVE_ROWS_CACHE: dict[int, tuple[weakref.ref, tuple, np.dtype, int]] = {}
 _LIVE_ROWS_CACHE_MAX = 4096
 
 
@@ -145,8 +150,15 @@ def _live_rows(table: Table) -> int:
     w = table[WEIGHT_COL]
     key = id(w)
     hit = _LIVE_ROWS_CACHE.get(key)
-    if hit is not None and hit[0]() is w:
-        return hit[1]
+    if hit is not None:
+        ref, shape, dtype, cached = hit
+        if (
+            ref() is w
+            and getattr(w, "shape", None) == shape
+            and getattr(w, "dtype", None) == dtype
+        ):
+            return cached
+        _LIVE_ROWS_CACHE.pop(key, None)  # id recycled: drop the stale entry
     live = int(np.clip(weights_of(table), 0, None).sum())
     try:
         ref = weakref.ref(
@@ -156,7 +168,7 @@ def _live_rows(table: Table) -> int:
         return live
     if len(_LIVE_ROWS_CACHE) >= _LIVE_ROWS_CACHE_MAX:
         _LIVE_ROWS_CACHE.clear()
-    _LIVE_ROWS_CACHE[key] = (ref, live)
+    _LIVE_ROWS_CACHE[key] = (ref, w.shape, w.dtype, live)
     return live
 
 

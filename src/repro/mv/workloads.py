@@ -190,8 +190,11 @@ class UpdateSpec:
 
     ``mode="full"`` recomputes every MV from its complete inputs each round;
     ``mode="incremental"`` propagates Z-set weighted-row deltas through the
-    delta-supporting operators (DESIGN.md §5-6). Per refresh round each
-    ingesting scan:
+    delta-supporting operators (DESIGN.md §5-6); ``mode="adaptive"`` refreshes
+    incrementally but lets the scenario driver choose full recompute *per
+    view per round* from modeled costs calibrated by observed fallback rates
+    (``core.speedup.choose_refresh_modes``, DESIGN.md §11) — all three store
+    bitwise-identical MVs. Per refresh round each ingesting scan:
 
     * appends ``ingest_frac`` of its initial rows as new rows (INSERT),
     * rewrites ``update_frac`` of its live rows in place — same rid, fresh
@@ -212,7 +215,7 @@ class UpdateSpec:
     delete_frac: float = 0.0
 
     def __post_init__(self):
-        if self.mode not in ("full", "incremental"):
+        if self.mode not in ("full", "incremental", "adaptive"):
             raise ValueError(f"unknown update mode {self.mode!r}")
         if not (0.0 <= self.ingest_frac <= 1.0):
             raise ValueError("ingest_frac must be in [0, 1]")
@@ -239,6 +242,7 @@ def incremental_view(
     round_idx: int = 1,
     sizes: Sequence[float] | None = None,
     fallback_rate: float = 1.0,
+    force_full: frozenset[int] | set[int] = frozenset(),
 ) -> Workload:
     """The per-round refresh view of a workload: a same-shape Workload whose
     node sizes are the round's *update bytes* (insert-only delta for
@@ -251,7 +255,9 @@ def incremental_view(
     sizes (e.g. observed bytes from the store manifest — the paper's
     "metrics from previous runs"); ``fallback_rate`` calibrates the JOIN
     correction-cost term with the partial-fallback rate observed in earlier
-    rounds (``speedup.propagate_update``)."""
+    rounds (``speedup.propagate_update``); ``force_full`` marks nodes the
+    adaptive chooser decided to recompute fully this round, so the planner
+    prices the refresh the engine will actually run."""
     from ..core.speedup import propagate_update
 
     base_sizes = [float(s) for s in (sizes if sizes is not None else
@@ -269,6 +275,7 @@ def incremental_view(
         update_frac=spec.update_frac,
         delete_frac=spec.delete_frac,
         join_fallback_rate=fallback_rate,
+        force_full=frozenset(force_full),
     )
     nodes = [
         dataclasses.replace(
@@ -290,9 +297,45 @@ def incremental_view(
         full_sizes=upd.full_sizes,
         lineage=upd.lineage,
         fallback_rate=fallback_rate,
+        forced_full=tuple(sorted(force_full)),
     )
     return Workload(
         name=f"{workload.name}@{spec.mode}-r{round_idx}", nodes=nodes, meta=meta
+    )
+
+
+def adaptive_force_full(
+    workload: Workload,
+    spec: UpdateSpec,
+    cost_model: CostModel,
+    round_idx: int = 1,
+    sizes: Sequence[float] | None = None,
+    fallback_rate: float = 1.0,
+) -> frozenset[int]:
+    """The ``mode="adaptive"`` per-round decision: which nodes should be
+    recomputed fully this round, from modeled costs under the observed
+    (EWMA-calibrated) JOIN fallback rate. Thin marshalling wrapper over
+    ``core.speedup.choose_refresh_modes``; feed the result to both
+    ``incremental_view(force_full=...)`` (so the planner prices it) and the
+    engine's ``configure_round(force_full=...)`` (so the runtime executes
+    it)."""
+    from ..core.speedup import choose_refresh_modes
+
+    base_sizes = [float(s) for s in (sizes if sizes is not None else
+                                     [n.size for n in workload.nodes])]
+    return choose_refresh_modes(
+        [n.op for n in workload.nodes],
+        [n.parents for n in workload.nodes],
+        base_sizes,
+        [n.compute for n in workload.nodes],
+        [n.base_read for n in workload.nodes],
+        spec.resolve_ingest(workload),
+        spec.ingest_frac,
+        cost_model,
+        round_idx=round_idx,
+        update_frac=spec.update_frac,
+        delete_frac=spec.delete_frac,
+        join_fallback_rate=fallback_rate,
     )
 
 

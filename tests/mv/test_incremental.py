@@ -424,7 +424,8 @@ def test_consolidation_policy_bounds_tombstone_debt(tmp_path):
 def test_join_fallback_rate_observed_and_fed_forward(tmp_path):
     """Right-side updates trigger partial fallbacks; the engine records the
     observed affected/matched key profile per round and later rounds'
-    planners use the cumulative observed rate in the correction-cost term."""
+    planners use the EWMA-smoothed observed rate in the correction-cost
+    term (first observation == plain ratio, so round 2 sees mat/aff)."""
     wl = build(tmp_path, seed=3)
     reports, _, _ = run_both(
         tmp_path, wl, dict(ingest_frac=0.1, update_frac=0.2, n_rounds=3)
@@ -469,3 +470,57 @@ def test_round_zero_is_identical_across_modes(tmp_path):
     assert a.plan.order == b.plan.order
     assert a.plan.flagged == b.plan.flagged
     assert set(a.run.executed) == set(b.run.executed)
+
+
+def test_consolidation_fires_on_round_zero(tmp_path):
+    """Regression: the consolidation scheduler used to skip round 0
+    entirely. A retraction-heavy initial load that already breaches the
+    debt ratio must consolidate before round 1's timed window inherits the
+    debt — the real precondition is parts > 1 (old content to fold into),
+    not the round index."""
+    from repro.mv import tableops as T
+    from repro.mv.incremental import IncrementalEngine
+
+    wl = build(tmp_path, n_nodes=3, seed=0, bytes_per_root=1 << 12)
+    store = DiskStore(tmp_path / "r0")
+    name = wl.nodes[0].name
+    base = T.make_base_table(200, 3, seed=1, rid_base=T.make_rid_base(0, 0))
+    store.write(name, base)
+    dead = {k: np.asarray(v)[:150].copy() for k, v in base.items()}
+    dead[T.WEIGHT_COL] = np.full(150, -1, np.int64)
+    store.append(name, dead)
+    assert store.parts(name) > 1
+    assert store.tombstone_ratio(name) > 0.5
+
+    engine = IncrementalEngine(
+        wl, store, budget_bytes=1e9,
+        spec=UpdateSpec(mode="incremental"), consolidate_ratio=0.5,
+    )
+    engine.configure_round(0)
+    assert engine._finalize_run() >= 1
+    assert store.parts(name) == 1
+    assert store.tombstone_ratio(name) <= 0.5
+
+
+def test_fallback_rate_ewma_recovers_after_churn_spike():
+    """Regression: the fed-forward JOIN fallback rate was a cumulative
+    ratio, so one churn spike pinned the correction-cost term near 1.0 for
+    the rest of a long scenario. The EWMA estimator forgets the spike
+    within a few quiet rounds."""
+    from repro.mv.incremental import FallbackRateEwma
+
+    ewma = FallbackRateEwma()
+    assert ewma.rate == 1.0  # conservative prior before any observation
+
+    ewma.observe(1000, 1000)  # churn spike: every affected key matched
+    assert ewma.rate == 1.0
+    for _ in range(3):
+        ewma.observe(10, 0)   # quiet rounds
+    assert ewma.rate < 0.15   # alpha=0.5: 1.0 -> 0.5 -> 0.25 -> 0.125
+
+    # the old cumulative estimator would still be pinned near the spike
+    cumulative = (1000 + 0) / (1000 + 30)
+    assert cumulative > 0.95
+
+    ewma.observe(0, 0)        # rounds with no affected keys don't update
+    assert ewma.rate == pytest.approx(0.125)

@@ -1,0 +1,269 @@
+"""Merge soundness and bitwise parity of MQO shared-subexpression
+compilation (mv/mqo.py, DESIGN.md §11).
+
+Covers the merge-soundness matrix: opaque closures never merge,
+param-differing FILTERs never merge, fingerprints are deterministic and
+partition-aware across P=4 lifts, and the merged DAG stays bitwise
+identical to the unshared workload across seeds × update kinds × worker
+counts while executing each shared subtree exactly once per round. The
+adaptive full-vs-incremental chooser rides the same scenario machinery, so
+its parity and forcing behavior are asserted here too.
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+from collections import Counter
+
+import pytest
+
+from repro.core import CostModel
+from repro.core.speedup import choose_refresh_modes
+from repro.mv import (
+    DiskStore,
+    UpdateSpec,
+    calibrate_sizes,
+    generate_workload,
+    realize_workload,
+    run_scenario,
+    verify_scenario_equivalence,
+)
+from repro.mv import ir as mvir
+from repro.mv.mqo import (
+    merge_workload,
+    node_fingerprints,
+    shared_prefix_workload,
+    verify_merged_equivalence,
+)
+from repro.mv.partition import partition_workload
+
+CM = CostModel(
+    disk_read_bw=50e6,
+    disk_write_bw=50e6,
+    mem_read_bw=1e12,
+    mem_write_bw=1e12,
+    disk_latency=0.0,
+)
+
+
+def build(tmp_path, n_views=3, seed=3, bytes_per_root=1 << 13):
+    wl = realize_workload(
+        shared_prefix_workload(n_views=n_views),
+        bytes_per_root=bytes_per_root, seed=seed,
+    )
+    return calibrate_sizes(wl, DiskStore(tmp_path / "calib"))
+
+
+def run_pair(tmp_path, wl, merged, spec_kw, k=1, budget_frac=0.5):
+    budget = sum(n.size for n in merged.workload.nodes) * budget_frac
+    spec = UpdateSpec(mode="incremental", **spec_kw)
+    store_u = DiskStore(tmp_path / "unshared")
+    store_m = DiskStore(tmp_path / "merged")
+    rep_u = run_scenario(wl, store_u, budget, spec, CM, n_compute_workers=k)
+    rep_m = run_scenario(merged.workload, store_m, budget, spec, CM,
+                         n_compute_workers=k)
+    return rep_u, rep_m, store_u, store_m
+
+
+# ---------------------------------------------------------------------------
+# merge soundness: what must and must not merge
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_merges_expected_classes(tmp_path):
+    wl = build(tmp_path)
+    merged = merge_workload(wl)
+    assert wl.n == 23 and merged.workload.n == 19
+    assert merged.n_merged_away == 4
+    assert merged.shared == ("v0_filter", "v0_join")
+    assert merged.classes["v0_filter"] == (2, 9, 16)
+    assert merged.classes["v0_join"] == (3, 10, 17)
+    # consumers are rewired onto the representatives; every original view
+    # name resolves through name_map
+    assert merged.name_map["v2_filter"] == "v0_filter"
+    assert merged.name_map["v1_join"] == "v0_join"
+    # kept nodes preserve topological order (parents before children)
+    for i, n in enumerate(merged.workload.nodes):
+        assert all(p < i for p in n.parents)
+
+
+def test_opaque_closures_never_merge(tmp_path):
+    """A hand-written closure the lifter cannot classify fingerprints
+    opaque-unique: it never joins an equivalence class, and its downstream
+    consumers stop merging too (their input fingerprints diverge)."""
+    wl = build(tmp_path)
+
+    def opaque(inputs):
+        t = inputs[0]
+        return t
+
+    nodes = list(wl.nodes)
+    for i, n in enumerate(nodes):
+        if n.name in ("v0_filter", "v1_filter"):
+            nodes[i] = dc.replace(n, fn=opaque)
+    wl2 = dc.replace(wl, nodes=nodes)
+
+    ir = mvir.infer_schemas(mvir.lift_workload(wl2))
+    assert not ir.nodes[2].lifted and not ir.nodes[9].lifted
+    fps = node_fingerprints(ir)
+    assert fps[2] != fps[9]  # identical bodies, still never equal
+    merged = merge_workload(wl2, ir)
+    assert merged.n_merged_away == 0
+    assert not merged.shared
+
+
+def test_param_differing_filters_never_merge():
+    """Two FILTERs over the same scan whose node indices are not congruent
+    mod 7 carry different lifted thresholds — structurally similar, never
+    equal."""
+    from repro.mv.workloads import MVNode, Workload
+
+    wl = Workload(name="param_diff", nodes=[
+        MVNode("scan", (), "SCAN", 1e6, 0.0, base_read=1e6),
+        MVNode("f1", (0,), "FILTER", 7e5, 1e-4),
+        MVNode("f2", (0,), "FILTER", 7e5, 1e-4),
+    ])
+    ir = mvir.infer_schemas(mvir.lift_workload(wl))
+    assert dict(ir.nodes[1].params)["threshold"] != \
+        dict(ir.nodes[2].params)["threshold"]
+    fps = node_fingerprints(ir)
+    assert fps[1] != fps[2]
+    assert merge_workload(wl, ir).n_merged_away == 0
+
+
+def test_fingerprints_stable_and_partition_aware(tmp_path):
+    """Fingerprinting is deterministic across independent lifts, and a P=4
+    partition expansion merges only within a partition — the partition tag
+    is part of the node's identity, so replicas never collapse across
+    shards."""
+    wl = build(tmp_path)
+    fp1 = node_fingerprints(mvir.infer_schemas(mvir.lift_workload(wl)))
+    fp2 = node_fingerprints(mvir.infer_schemas(mvir.lift_workload(wl)))
+    assert fp1 == fp2
+
+    pwl, _ = partition_workload(wl, 4)
+    pir = mvir.infer_schemas(mvir.lift_workload(pwl))
+    fps = node_fingerprints(pir)
+    names = [n.name for n in pwl.nodes]
+    v0f = [i for i, n in enumerate(names) if n.startswith("v0_filter")]
+    assert len(v0f) == 4
+    assert len({fps[i] for i in v0f}) == 4  # distinct across partitions
+    pm = merge_workload(pwl, pir)
+    for rep, members in pm.classes.items():
+        if len(members) < 2:
+            continue
+        parts = {names[m].rsplit("@", 1)[-1] for m in members}
+        assert len(parts) == 1, f"{rep} merged across partitions: {members}"
+    # each partition still finds its own filter+join class
+    assert sum(len(v) > 1 for v in pm.classes.values()) == 8
+
+
+def test_merged_workload_relifts_fully(tmp_path):
+    """Compiled delta programs on merged nodes carry their parameter
+    provenance (``param_src``), so the merged workload itself re-lifts with
+    every node inspectable — merges of merges stay verifiable."""
+    merged = merge_workload(build(tmp_path))
+    re_ir = mvir.lift_workload(merged.workload)
+    assert all(n.lifted for n in re_ir.nodes)
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity + once-per-round execution
+# ---------------------------------------------------------------------------
+
+SPEC_KW = {
+    "insert": dict(ingest_frac=0.25, n_rounds=2),
+    "mixed": dict(ingest_frac=0.2, update_frac=0.15, delete_frac=0.1,
+                  n_rounds=2),
+}
+
+
+@pytest.mark.parametrize("seed,kind,k", [
+    (3, "insert", 1),
+    (3, "mixed", 2),
+    (5, "insert", 2),
+    (5, "mixed", 1),
+    (7, "mixed", 1),
+])
+def test_merged_bitwise_parity_matrix(tmp_path, seed, kind, k):
+    """Every original view's stored bytes under the shared DAG are
+    bitwise-identical to the unshared run's, across seeds × update kinds ×
+    worker counts."""
+    wl = build(tmp_path, seed=seed)
+    merged = merge_workload(wl)
+    _, _, store_u, store_m = run_pair(
+        tmp_path, wl, merged, SPEC_KW[kind], k=k
+    )
+    verify_merged_equivalence(merged, store_m, store_u)
+
+
+def test_shared_subtree_executes_once_per_round(tmp_path):
+    """The merged run refreshes each shared representative exactly once per
+    round while the unshared run pays once per class member."""
+    wl = build(tmp_path)
+    merged = merge_workload(wl)
+    rep_u, rep_m, _, _ = run_pair(tmp_path, wl, merged, SPEC_KW["mixed"])
+    for r in rep_m.rounds:
+        counts = Counter(r.run.executed)
+        assert max(counts.values()) == 1
+        for rep in merged.shared:
+            assert counts[rep] == 1, (r.round_idx, rep)
+    for r in rep_u.rounds[1:]:
+        counts = Counter(r.run.executed)
+        for rep, members in merged.classes.items():
+            if len(members) < 2:
+                continue
+            names = [wl.nodes[m].name for m in members]
+            assert sum(counts[n] for n in names) == len(members)
+
+
+# ---------------------------------------------------------------------------
+# adaptive full-vs-incremental (Enzyme-style per-view-per-round choice)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_mode_bitwise_and_forces_full(tmp_path):
+    """mode="adaptive" flips individual views to full recompute when the
+    modeled incremental path is costlier (churn-heavy rounds), records the
+    choice in ``RoundReport.forced_full``, and stays bitwise identical to
+    both static modes — the chooser is performance-only."""
+    wl = calibrate_sizes(
+        realize_workload(generate_workload(n_nodes=14, seed=3),
+                         bytes_per_root=1 << 15),
+        DiskStore(tmp_path / "calib"),
+    )
+    budget = sum(n.size for n in wl.nodes) * 0.4
+    kw = dict(ingest_frac=0.25, update_frac=0.25, delete_frac=0.1,
+              n_rounds=3)
+    stores, reports = {}, {}
+    for mode in ("adaptive", "incremental", "full"):
+        store = DiskStore(tmp_path / mode)
+        stores[mode] = store
+        reports[mode] = run_scenario(
+            wl, store, budget, UpdateSpec(mode=mode, **kw), CM
+        )
+    rounds = reports["adaptive"].rounds
+    assert rounds[0].forced_full == ()  # round 0 builds everything anyway
+    assert any(r.forced_full for r in rounds[1:]), (
+        "churn-heavy scenario should force at least one view to full"
+    )
+    for other in ("incremental", "full"):
+        verify_scenario_equivalence(wl, stores["adaptive"], stores[other])
+    # static modes never force
+    assert all(r.forced_full == () for r in reports["incremental"].rounds)
+
+
+def test_choose_refresh_modes_tracks_fallback_rate():
+    """The node-local chooser prices the JOIN partial-fallback correction
+    with the observed rate: a hot rate forces the JOIN to full recompute
+    under update churn, a cold rate keeps it incremental."""
+    ops = ["SCAN", "SCAN", "JOIN"]
+    parents = [(), (), (0, 1)]
+    sizes = [1e6, 1e6, 2e6]
+    kw = dict(
+        computes=[0.01] * 3, base_reads=[1e6, 1e6, 0.0], ingest={0, 1},
+        frac=0.05, update_frac=0.3, cost_model=CM,
+    )
+    hot = choose_refresh_modes(ops, parents, sizes,
+                               join_fallback_rate=1.0, **kw)
+    cold = choose_refresh_modes(ops, parents, sizes,
+                                join_fallback_rate=0.0, **kw)
+    assert 2 in hot
+    assert 2 not in cold

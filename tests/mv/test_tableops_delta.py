@@ -554,3 +554,41 @@ def test_map_is_batch_shape_invariant():
         for i in range(0, 1001, 17)
     ]
     assert np.concatenate(parts).tobytes() == full.tobytes()
+
+
+def test_live_rows_cache_rejects_recycled_id():
+    """Regression: ``table_sizes`` memoizes the weight-column live sum
+    keyed by the array's id(). CPython recycles addresses, so a poisoned
+    entry whose weakref is dead (the exact window where id() lies) must be
+    recomputed and evicted — identity of the key alone is not trusted."""
+    w = np.array([1, 1, -1, 1], np.int64)
+    table = {"c0": np.zeros(4, np.float32), T.WEIGHT_COL: w}
+
+    T._LIVE_ROWS_CACHE[id(w)] = (
+        lambda: None,               # dead-ref stand-in: target "collected"
+        (999,), np.dtype(np.int8), 12345,
+    )
+    assert T._live_rows(table) == 3  # recomputed, not the poisoned 12345
+    ref, shape, dtype, live = T._LIVE_ROWS_CACHE[id(w)]
+    assert ref() is w and shape == w.shape and live == 3
+
+
+def test_live_rows_cache_correct_under_forced_gc_churn():
+    """Allocate and collect many weight arrays so ids get reused; every
+    probe (cold and cached) must return the true clipped sum, and the
+    weakref finalizers keep the cache from accumulating dead entries."""
+    import gc
+
+    for i in range(200):
+        n = 8 + (i % 5)
+        w = np.ones(n, np.int64)
+        w[: i % n] = -1
+        table = {"c0": np.zeros(n, np.float32), T.WEIGHT_COL: w}
+        expect = int(np.clip(w, 0, None).sum())
+        assert T._live_rows(table) == expect
+        assert T._live_rows(table) == expect  # memoized hit, same answer
+        del table, w
+        if i % 50 == 0:
+            gc.collect()
+    gc.collect()
+    assert len(T._LIVE_ROWS_CACHE) < 16

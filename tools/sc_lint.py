@@ -6,7 +6,8 @@ Runs every analysis pass of ``repro.analysis`` over the repo and over
 representative workloads, then gates error/warning findings against the
 checked-in baseline (``tools/sc_lint_baseline.json``). Info findings are
 report-only. The fixture selftest additionally asserts the linter still
-FIRES on the two historical bugs (``repro.analysis.fixtures``) and stays
+FIRES on the must-fire fixtures (``repro.analysis.fixtures``: the two
+historical bugs plus the forged captured-threshold MQO merge) and stays
 quiet on the shipped fixes — a rotted lint rule fails CI even when the repo
 itself is clean.
 
@@ -113,6 +114,28 @@ def _plan_findings() -> list[Finding]:
     return out
 
 
+def _mqo_findings() -> list[Finding]:
+    """Merge-soundness (DESIGN.md §11): run ``check_merged`` over
+    representative ``merge_workload`` outputs — the shared-prefix MQO
+    workload (realized, so the fingerprints come from real lifted closures)
+    and the scenario-matrix generator workload (which has no duplicate
+    definitions; its merge must be a no-op and still verify)."""
+    from repro.analysis.mqo_check import check_merged
+    from repro.mv import generate_workload, realize_workload
+    from repro.mv.mqo import merge_workload, shared_prefix_workload
+
+    out: list[Finding] = []
+    wl = realize_workload(
+        shared_prefix_workload(n_views=3), bytes_per_root=1 << 15, seed=3
+    )
+    out.extend(check_merged(merge_workload(wl)))
+    wl2 = realize_workload(
+        generate_workload(n_nodes=14, seed=3), bytes_per_root=1 << 15
+    )
+    out.extend(check_merged(merge_workload(wl2)))
+    return out
+
+
 def _fixture_findings() -> list[Finding]:
     """Must-fire selftest: each historical-bug fixture must trip its rule,
     and the shipped fix must be quiet. A miss is a gating, un-baselineable
@@ -164,6 +187,19 @@ def _fixture_findings() -> list[Finding]:
             regression(f"shipped_map_{i}",
                        "linter fires on a shipped softsign map kernel: "
                        + "; ".join(f.rule for f in hits))
+
+    from repro.analysis.mqo_check import check_merged
+
+    forged = check_merged(fixtures.forged_threshold_merge())
+    if not any(f.rule == "unsound-merge" for f in forged):
+        regression("forged_threshold_merge",
+                   "unsound-merge no longer fires on the forged "
+                   "captured-threshold merge")
+    honest = check_merged(fixtures.genuine_shared_prefix_merge())
+    if gating(honest):
+        regression("genuine_shared_prefix_merge",
+                   "merge-soundness pass fires on an honest merge_workload "
+                   "result: " + "; ".join(f.rule for f in honest))
     return out
 
 
@@ -172,6 +208,7 @@ PASSES = (
     ("jaxpr", _jaxpr_findings),
     ("delta-safety", _delta_safety_findings),
     ("plan", _plan_findings),
+    ("mqo", _mqo_findings),
     ("fixtures", _fixture_findings),
 )
 
