@@ -1,7 +1,11 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import functools
 import json
+import os
+import subprocess
+import time
 from pathlib import Path
 
 from repro.core import Plan, serial_plan, solve
@@ -9,6 +13,37 @@ from repro.core.speedup import EFFECTIVE_NFS_COST_MODEL
 from repro.mv import Workload, paper_workloads, simulate
 
 RESULTS = Path("results/bench")
+
+# ---------------------------------------------------------------------------
+# common result envelope (sc-bench/v1): every module that goes through
+# ``benchmarks.run`` writes results/bench/<name>.json with the same outer
+# shape — provenance (git sha, data-plane impl, seed), the module wall
+# clock, the headline speedups, and the module-specific payload under
+# ``data`` — so downstream tooling can aggregate runs without per-module
+# parsers.
+# ---------------------------------------------------------------------------
+
+BENCH_SCHEMA = "sc-bench/v1"
+_module_ctx: dict = {"name": None, "t0": None}
+
+
+def begin_module(name: str) -> None:
+    """Called by the orchestrator before each module's ``run``: stamps the
+    module name and starts the wall clock ``save_json`` records."""
+    _module_ctx["name"] = name
+    _module_ctx["t0"] = time.perf_counter()
+
+
+@functools.lru_cache(maxsize=1)
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=Path(__file__).resolve().parent,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 # paper setup: Memory Catalog = 1.6% of dataset size (1.6GB @ 100GB)
 DEFAULT_CATALOG_FRACTION = 0.016
@@ -55,10 +90,27 @@ def run_method(wl: Workload, method: str, budget: float,
                     n_writers=n_writers)
 
 
-def save_json(name: str, payload) -> Path:
+def save_json(name: str, payload, seed: int | None = None,
+              speedups: dict | None = None) -> Path:
+    """Write one module's results under the sc-bench/v1 envelope. ``seed``
+    and ``speedups`` (headline method-over-baseline ratios, e.g.
+    ``{"sc_vs_serial": 2.1}``) are optional module-supplied summary fields;
+    the module wall clock runs from ``begin_module`` (None when the module
+    was invoked directly rather than through ``benchmarks.run``)."""
+    t0 = _module_ctx["t0"]
+    envelope = {
+        "schema": BENCH_SCHEMA,
+        "module": _module_ctx["name"] or name,
+        "git_sha": _git_sha(),
+        "impl": os.environ.get("SC_DATAPLANE", "numpy"),
+        "seed": seed,
+        "wall_s": (time.perf_counter() - t0) if t0 is not None else None,
+        "speedups": speedups or {},
+        "data": payload,
+    }
     RESULTS.mkdir(parents=True, exist_ok=True)
     p = RESULTS / f"{name}.json"
-    p.write_text(json.dumps(payload, indent=1, default=str))
+    p.write_text(json.dumps(envelope, indent=1, default=str))
     return p
 
 

@@ -163,7 +163,15 @@ def run(quick: bool = False, tmp_root: str = "results/incremental_real"):
         "simulated": _simulated(scale_gb, n_rounds),
         "real": _real(quick, tmp_root),
     }
-    save_json("incremental", out)
+    speedups = {
+        f"real_{s}_inc_vs_full": out["real"][s]["inc_vs_full"]
+        for s in out["real"]
+    }
+    for kind, kres in out["simulated"].items():
+        speedups[f"sim_{kind}_best_sc"] = max(
+            r["inc_speedup"] for r in kres.values()
+        )
+    save_json("incremental", out, seed=5, speedups=speedups)
     return out
 
 

@@ -171,7 +171,8 @@ def run(quick: bool = False, tmp_root: str = "results/mqo_real"):
         "shared_flagged_rounds": flagged_rounds,
         "bitwise_identical": True,
     }
-    save_json("mqo_bench", out)
+    save_json("mqo_bench", out, seed=3,
+              speedups={"merged_refresh": speedup})
     shutil.rmtree(root, ignore_errors=True)
     return out
 

@@ -129,7 +129,12 @@ def run(quick: bool = False):
         )
     best = max(r["build_speedup"] for r in out["sweep"].values())
     print(f"best partitioned build speedup: {best:.2f}x")
-    save_json("partition_sweep", out)
+    save_json("partition_sweep", out, seed=31, speedups={
+        "best_build": best,
+        "best_refresh": max(
+            r["refresh_speedup"] for r in out["sweep"].values()
+        ),
+    })
     return out
 
 

@@ -119,7 +119,10 @@ def run(quick: bool = False):
             )
     best = max(r["solve_ratio"] for r in out["sweep"].values())
     print(f"best hierarchical solve-time win: {best:.0f}x")
-    save_json("planner_scale", out)
+    save_json("planner_scale", out, speedups={
+        "best_solve_ratio": best,
+        "best_e2e_hier": max(r["e2e_hier"] for r in out["sweep"].values()),
+    })
     return out
 
 

@@ -121,6 +121,8 @@ def main(argv=None):
         print(f"\n{'='*72}\n[benchmarks] {name}\n{'='*72}")
         t0 = time.perf_counter()
         try:
+            from . import common
+            common.begin_module(name)
             fn(quick=args.quick)
             print(f"[benchmarks] {name} done in {time.perf_counter()-t0:.1f}s")
         except Exception:

@@ -150,7 +150,9 @@ def run(quick: bool = False, smoke: bool = False, sizes=None,
         parity_ops_checked=sorted({o for o, _ in parity_checked}),
         jax_ops_ge_2x_at_top=[o for _, o in fast],
     )
-    save_json("tableops", payload)
+    save_json("tableops", payload, seed=7, speedups={
+        f"jax_{o}_vs_numpy": s for s, o in fast
+    })
     if assert_speedup:
         assert len(fast) >= 2, (
             f"acceptance: expected >=2 jax ops at >=2x rows/s over numpy at "

@@ -14,6 +14,9 @@ from __future__ import annotations
 import threading
 from typing import Any
 
+from ..obs import trace as obs_trace
+from ..obs.metrics import METRICS
+
 
 class CatalogOverflowError(RuntimeError):
     pass
@@ -53,6 +56,8 @@ class MemoryCatalog:
             self._entries[name] = (value, size)
             self._used += size
             self._peak = max(self._peak, self._used)
+            if obs_trace.enabled():
+                self._trace_admit(name, size)
 
     def try_put(self, name: str, value: Any, size: float) -> bool:
         """Atomically admit ``name`` iff it fits; False instead of raising.
@@ -66,6 +71,8 @@ class MemoryCatalog:
             self._entries[name] = (value, size)
             self._used += size
             self._peak = max(self._peak, self._used)
+            if obs_trace.enabled():
+                self._trace_admit(name, size)
             return True
 
     def get(self, name: str) -> Any:
@@ -107,6 +114,17 @@ class MemoryCatalog:
             if name in self._entries:
                 _, size = self._entries.pop(name)
                 self._used -= size
+                if obs_trace.enabled():
+                    obs_trace.instant("release", name, size)
+                    obs_trace.counter("catalog.bytes", self._used)
+                    METRICS.gauge("catalog_used_bytes", self._used)
+
+    # emitted inside put/try_put's critical section; safe because the trace
+    # and metrics locks never call back into the catalog
+    def _trace_admit(self, name: str, size: float) -> None:
+        obs_trace.instant("admit", name, size)
+        obs_trace.counter("catalog.bytes", self._used)
+        METRICS.gauge("catalog_used_bytes", self._used)
 
     def clear(self) -> None:
         """Drop every entry and reset statistics. A reused catalog (the

@@ -43,6 +43,8 @@ from typing import Any, Iterable, Sequence
 
 from ..core.altopt import Plan
 from ..core.speedup import CostModel
+from ..obs import trace as obs_trace
+from ..obs.metrics import METRICS
 from .catalog import MemoryCatalog
 from .storage import DiskStore
 from .tableops import table_sizes
@@ -170,28 +172,56 @@ class RunReport:
     node_seconds: dict[str, float]
     n_workers: int = 1
     consolidations: int = 0  # tombstone consolidations charged to this run
+    # real wall-clock (node, start, end) per executed node, seconds relative
+    # to run start, sorted by start — same shape as ``SimReport.timeline``
+    # so real and simulated runs overlay directly (obs.export)
+    timeline: list[tuple[str, float, float]] = dataclasses.field(
+        default_factory=list
+    )
+    # per-entry catalog outcome tallies: name -> {hits, misses, overflow}
+    entry_stats: dict[str, dict[str, int]] = dataclasses.field(
+        default_factory=dict
+    )
 
 
 class _Counters:
-    """Thread-safe hit/miss/overflow tallies shared by compute workers."""
+    """Thread-safe hit/miss/overflow tallies shared by compute workers,
+    kept both in aggregate and per store-entry name."""
 
     def __init__(self):
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.overflow = 0
+        self._by_entry: dict[str, list[int]] = {}
 
-    def hit(self):
+    def _entry(self, name: str) -> list[int]:
+        e = self._by_entry.get(name)
+        if e is None:
+            e = self._by_entry[name] = [0, 0, 0]
+        return e
+
+    def hit(self, name: str = ""):
         with self._lock:
             self.hits += 1
+            self._entry(name)[0] += 1
 
-    def miss(self):
+    def miss(self, name: str = ""):
         with self._lock:
             self.misses += 1
+            self._entry(name)[1] += 1
 
-    def overflowed(self):
+    def overflowed(self, name: str = ""):
         with self._lock:
             self.overflow += 1
+            self._entry(name)[2] += 1
+
+    def entry_stats(self) -> dict[str, dict[str, int]]:
+        with self._lock:
+            return {
+                k: {"hits": h, "misses": m, "overflow": o}
+                for k, (h, m, o) in sorted(self._by_entry.items())
+            }
 
 
 @dataclasses.dataclass
@@ -204,6 +234,8 @@ class _RunState:
     write_futures: list[Future]
     wf_lock: threading.Lock
     flagged: frozenset[int]
+    t0: float = 0.0  # run start (perf_counter) for timeline timestamps
+    timeline: list = dataclasses.field(default_factory=list)
 
 
 class ThreadedEngine:
@@ -254,10 +286,21 @@ class ThreadedEngine:
         # A flagged parent stays resident until its last child has
         # *completed*, so this read can never race its release.
         if p in rt.flagged and pname in rt.catalog:
-            rt.stats.hit()
-            return rt.catalog.get(pname)
-        rt.stats.miss()
-        return self.store.read(pname)
+            rt.stats.hit(pname)
+            with obs_trace.span(
+                "read.catalog", pname,
+                rt.catalog.entry_bytes(pname) if obs_trace.enabled() else 0.0,
+            ):
+                return rt.catalog.get(pname)
+        rt.stats.miss(pname)
+        with obs_trace.span("read.disk", pname):
+            return self.store.read(pname)
+
+    def _bg_write(self, write_fn, name: str, table) -> float:
+        """Background materialization, spanned on the writer's own thread
+        (the Fig. 6 write-behind drain)."""
+        with obs_trace.span("write.behind", name):
+            return write_fn(name, table)
 
     def _publish(self, v: int, out: Any, rt: _RunState) -> None:
         node = self.workload.nodes[v]
@@ -265,13 +308,15 @@ class ThreadedEngine:
         # weighted part admitted repeatedly is not re-summed (tableops)
         size = max(table_sizes(out))
         if v in rt.flagged and rt.catalog.try_put(node.name, out, size):
-            fut = rt.writer.submit(self.store.write, node.name, out)
+            fut = rt.writer.submit(self._bg_write, self.store.write,
+                                   node.name, out)
             with rt.wf_lock:
                 rt.write_futures.append(fut)
         else:
             if v in rt.flagged:
-                rt.stats.overflowed()  # estimate too small; degrade safely
-            self.store.write(node.name, out)
+                rt.stats.overflowed(node.name)  # estimate too small; degrade
+            with obs_trace.span("write.sync", node.name):
+                self.store.write(node.name, out)
 
     def _exec_node(self, v: int, rt: _RunState) -> float:
         node = self.workload.nodes[v]
@@ -279,8 +324,20 @@ class ThreadedEngine:
         inputs = [self._gather_input(p, rt) for p in node.parents]
         if node.fn is None:
             raise ValueError(f"node {node.name} has no compute fn")
-        self._publish(v, node.fn(inputs), rt)
+        with obs_trace.span("compute", node.name):
+            out = node.fn(inputs)
+        self._publish(v, out, rt)
         return time.perf_counter() - tn0
+
+    def _timed_exec(self, v: int, rt: _RunState) -> float:
+        """Worker entry point: one node end to end, recorded as a ``task``
+        span and a ``RunReport.timeline`` row (list.append is atomic)."""
+        name = self.workload.nodes[v].name
+        start = time.perf_counter()
+        with obs_trace.span("task", name):
+            dt = self._exec_node(v, rt)
+        rt.timeline.append((name, start - rt.t0, time.perf_counter() - rt.t0))
+        return dt
 
     def _finalize_run(self) -> int:
         """Post-drain maintenance charged into the run's elapsed time (the
@@ -313,6 +370,9 @@ class ThreadedEngine:
             for r in core.complete(v):
                 self.catalog.release(wl.nodes[r].name)
 
+        round_idx = int(getattr(self, "round_idx", 0))
+        obs_trace.set_round(round_idx)
+        tr0 = obs_trace.now()
         t0 = time.perf_counter()
         pool = ThreadPoolExecutor(max_workers=self.n_compute_workers)
         writer = ThreadPoolExecutor(max_workers=self.n_writers)
@@ -323,6 +383,7 @@ class ThreadedEngine:
             write_futures=[],
             wf_lock=threading.Lock(),
             flagged=flagged,
+            t0=t0,
         )
         inflight: dict[Future, int] = {}
         try:
@@ -340,7 +401,7 @@ class ThreadedEngine:
                         skipped.append(node.name)
                         process_completion(v)
                         continue
-                    inflight[pool.submit(self._exec_node, v, rt)] = v
+                    inflight[pool.submit(self._timed_exec, v, rt)] = v
                 if core.done():
                     break
                 if not inflight:
@@ -369,6 +430,16 @@ class ThreadedEngine:
         # this run's elapsed time — the round's plan pays its own debt
         consolidations = self._finalize_run()
         elapsed = time.perf_counter() - t0
+        if obs_trace.enabled():
+            # the round frame every other span of this run nests inside
+            obs_trace.record(
+                "round", f"round{round_idx}", tr0, obs_trace.now() - tr0
+            )
+            METRICS.observe("round_wall_s", elapsed)
+            for name, es in stats.entry_stats().items():
+                METRICS.inc("catalog_hits", es["hits"], entry=name)
+                METRICS.inc("catalog_misses", es["misses"], entry=name)
+                METRICS.inc("catalog_overflow", es["overflow"], entry=name)
         return RunReport(
             elapsed=elapsed,
             peak_catalog_bytes=self.catalog.peak_bytes,
@@ -382,6 +453,8 @@ class ThreadedEngine:
             node_seconds=node_seconds,
             n_workers=self.n_compute_workers,
             consolidations=consolidations,
+            timeline=sorted(rt.timeline, key=lambda x: (x[1], x[0])),
+            entry_stats=stats.entry_stats(),
         )
 
 
@@ -454,10 +527,22 @@ def simulate_events(
     lru_bytes = 0.0
     lru_cap = (lru_budget if lru_budget is not None else 0.0) if mode == "lru" else 0.0
 
+    # span emission under the real engine's schema, on the simulated clock
+    # (ts offset by the scenario driver's cumulative round time so multi-
+    # round simulated traces lay out sequentially like real ones)
+    tr = obs_trace.enabled()
+    off = obs_trace.sim_offset() if tr else 0.0
+
+    def emit(cat: str, name: str, ts: float, dur: float, worker: str,
+             nbytes: float = 0.0) -> None:
+        obs_trace.record(cat, name, off + ts, dur, nbytes=nbytes,
+                         worker=worker, track="sim")
+
     for i, v in enumerate(core.order):
         node = wl.nodes[v]
         core.issue()
         ch = min(range(k), key=lambda c: worker_free[c])
+        chname = f"ch{ch}"
         t = max(worker_free[ch], prev_issue)
         for p in node.parents:
             t = max(t, complete_t[p])
@@ -468,22 +553,35 @@ def simulate_events(
         # -- input access (blocks this channel only) -------------------------
         if node.base_read:
             dt = cm.read_base(node.base_read)  # base tables: never cached
+            if tr:
+                emit("read.base", node.name, t, dt, chname, node.base_read)
             t += dt
             blocking_read += dt
         for p in node.parents:
             psize = wl.nodes[p].size
+            pname = wl.nodes[p].name
             if p in flagged:
-                t += cm.read_mem(psize)
+                dt = cm.read_mem(psize)
+                if tr:
+                    emit("read.catalog", pname, t, dt, chname, psize)
+                t += dt
                 hits += 1
             elif mode == "lru" and p in lru:
-                t += cm.read_mem(psize)
+                dt = cm.read_mem(psize)
+                if tr:
+                    emit("read.catalog", pname, t, dt, chname, psize)
+                t += dt
                 lru.move_to_end(p)
                 hits += 1
             else:
                 dt = cm.read_disk(psize)
+                if tr:
+                    emit("read.disk", pname, t, dt, chname, psize)
                 t += dt
                 blocking_read += dt
         # -- compute (one full statement on one channel) ----------------------
+        if tr:
+            emit("compute", node.name, t, node.compute, chname)
         t += node.compute
         compute_total += node.compute
         # -- output creation ---------------------------------------------------
@@ -492,10 +590,17 @@ def simulate_events(
             events.append((t, 0, node.size))
             wc = min(range(nw), key=lambda c: writer_free[c])
             wdur = cm.write_disk(node.size)
-            writer_free[wc] = max(t, writer_free[wc]) + wdur
+            wstart = max(t, writer_free[wc])
+            writer_free[wc] = wstart + wdur
             background_write += wdur
+            if tr:
+                emit("admit", node.name, t, 0.0, chname, node.size)
+                emit("write.behind", node.name, wstart, wdur, f"w{wc}",
+                     node.size)
         else:
             dt = cm.write_disk(node.size)
+            if tr:
+                emit("write.sync", node.name, t, dt, chname, node.size)
             t += dt
             blocking_write += dt
             if mode == "lru" and node.size <= lru_cap:
@@ -507,6 +612,8 @@ def simulate_events(
         complete_t[v] = t
         worker_free[ch] = t
         timeline.append((node.name, start, t))
+        if tr:
+            emit("task", node.name, start, t - start, chname)
         cp[v] = (t - start) + max((cp[p] for p in node.parents), default=0.0)
         # -- releases: a flagged node frees when its last child completes ------
         for r in core.complete(v):
@@ -514,13 +621,22 @@ def simulate_events(
                 (complete_t[c] for c in core.children[r]), default=complete_t[r]
             )
             events.append((rel_t, 1, -wl.nodes[r].size))
+            if tr:
+                emit("release", wl.nodes[r].name, rel_t, 0.0, "cat",
+                     wl.nodes[r].size)
 
     cat_used = cat_peak = 0.0
-    for _, _, delta in sorted(events, key=lambda e: (e[0], e[1])):
+    for ev_t, _, delta in sorted(events, key=lambda e: (e[0], e[1])):
         cat_used += delta
         cat_peak = max(cat_peak, cat_used)
+        if tr:
+            obs_trace.record("counter", "catalog.bytes", off + ev_t, 0.0,
+                             worker="cat", track="sim", value=cat_used)
 
     end = max(max(complete_t, default=0.0), max(writer_free, default=0.0))
+    if tr:
+        emit("round", f"round{obs_trace.current_round()}", 0.0, end, "sim")
+        obs_trace.set_sim_offset(off + end)
     return SimReport(
         end_to_end=end,
         compute_seconds=compute_total,

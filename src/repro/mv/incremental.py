@@ -57,6 +57,8 @@ import numpy as np
 
 from ..core.altopt import Plan, serial_plan, solve
 from ..core.speedup import APPENDED, CHANGED, DELTA, REPLACED, STATIC, CostModel
+from ..obs import trace as obs_trace
+from ..obs.metrics import METRICS
 from . import tableops as T
 from .engine import RunReport, SimReport, ThreadedEngine, _RunState, simulate_events
 from .storage import DiskStore
@@ -180,7 +182,9 @@ class IncrementalEngine(ThreadedEngine):
             # (round 0 = the initial, weightless load)
             if node.delta_fn is None:
                 raise ValueError(f"scan {node.name} has no delta_fn")
-            self._publish_delta(v, node.delta_fn(r, self.spec), rt)
+            with obs_trace.span("compute", node.name):
+                delta = node.delta_fn(r, self.spec)
+            self._publish_delta(v, delta, rt)
             return time.perf_counter() - tn0
         pstat = [self.statuses[p] for p in node.parents]
         if r == 0 or self.spec.mode == "full" or v in self._force_full \
@@ -197,10 +201,15 @@ class IncrementalEngine(ThreadedEngine):
         if self.statuses[p] == STATIC:
             return T.empty_like(self.schemas[pname])
         if p in rt.flagged and pname in rt.catalog:
-            rt.stats.hit()
-            return rt.catalog.get(pname)
-        rt.stats.miss()
-        return self.store.read_parts(pname, self._parts0[pname])
+            rt.stats.hit(pname)
+            with obs_trace.span(
+                "read.catalog", pname,
+                rt.catalog.entry_bytes(pname) if obs_trace.enabled() else 0.0,
+            ):
+                return rt.catalog.get(pname)
+        rt.stats.miss(pname)
+        with obs_trace.span("read.disk", pname):
+            return self.store.read_parts(pname, self._parts0[pname])
 
     def _old_input(self, p: int) -> T.Table:
         """Parent ``p``'s content as of the end of the previous round."""
@@ -221,15 +230,21 @@ class IncrementalEngine(ThreadedEngine):
         status = self.statuses[p]
         if status in CHANGED and p in rt.flagged and pname in rt.catalog:
             # catalog holds only the delta; historical parts come from disk
-            rt.stats.hit()
-            delta = rt.catalog.get(pname)
+            rt.stats.hit(pname)
+            with obs_trace.span(
+                "read.catalog", pname,
+                rt.catalog.entry_bytes(pname) if obs_trace.enabled() else 0.0,
+            ):
+                delta = rt.catalog.get(pname)
             if self._parts0[pname] == 0:
                 # first round for this MV: the delta is the whole table
                 if T.WEIGHT_COL not in delta:
                     return delta
                 return T.materialize_delta(delta)
-            rt.stats.miss()
-            return T.apply_delta(self._old_input(p), delta)
+            rt.stats.miss(pname)
+            with obs_trace.span("read.disk", pname):
+                old = self._old_input(p)
+            return T.apply_delta(old, delta)
         return super()._gather_input(p, rt)
 
     # -- output publication ----------------------------------------------------
@@ -261,13 +276,16 @@ class IncrementalEngine(ThreadedEngine):
         # cached-size pass instead of re-summing the weight column per probe
         size = max(T.table_sizes(delta))
         if v in rt.flagged and rt.catalog.try_put(node.name, delta, size):
-            fut = rt.writer.submit(self.store.append, node.name, delta)
+            fut = rt.writer.submit(
+                self._bg_write, self.store.append, node.name, delta
+            )
             with rt.wf_lock:
                 rt.write_futures.append(fut)
         else:
             if v in rt.flagged:
-                rt.stats.overflowed()
-            self.store.append(node.name, delta)
+                rt.stats.overflowed(node.name)
+            with obs_trace.span("write.sync", node.name):
+                self.store.append(node.name, delta)
 
     def _publish_replace(self, v: int, out: T.Table, rt: _RunState) -> None:
         self.statuses[v] = REPLACED
@@ -278,7 +296,9 @@ class IncrementalEngine(ThreadedEngine):
     def _refresh_full(self, v: int, rt: _RunState) -> None:
         node = self.workload.nodes[v]
         inputs = [self._gather_input(p, rt) for p in node.parents]
-        self._publish_replace(v, node.fn(inputs), rt)
+        with obs_trace.span("compute", node.name):
+            out = node.fn(inputs)
+        self._publish_replace(v, out, rt)
 
     def _refresh_delta(self, v: int, rt: _RunState) -> None:
         node = self.workload.nodes[v]
@@ -301,8 +321,10 @@ class IncrementalEngine(ThreadedEngine):
             # mergeable (signed) partial aggregates: agg the weighted delta,
             # merge exactly into the previous output (fixed-point sums —
             # tableops docstring); groups retracted to zero rows drop out
-            delta_agg = node.fn([deltas[0]])
-            old = self.store.read(node.name)
+            with obs_trace.span("compute", node.name):
+                delta_agg = node.fn([deltas[0]])
+            with obs_trace.span("read.disk", node.name):
+                old = self.store.read(node.name)
             self._publish_replace(v, T.merge_agg(old, delta_agg), rt)
         elif retracting and "rid" not in self.schemas[node.name]:
             # retractions splice by rid; a rid-less output (downstream of an
@@ -313,7 +335,9 @@ class IncrementalEngine(ThreadedEngine):
             # the node's own compute fn applied to the delta IS the delta
             # rule (weights ride along as a meta column)
             deltas = [T.with_weight(d) for d in deltas] if retracting else deltas
-            self._publish_delta(v, node.fn(deltas), rt)
+            with obs_trace.span("compute", node.name):
+                out = node.fn(deltas)
+            self._publish_delta(v, out, rt)
 
     def _full_from_delta(self, p: int, delta: T.Table) -> T.Table:
         """Parent ``p``'s full current content, assembled from its already-
@@ -355,22 +379,24 @@ class IncrementalEngine(ThreadedEngine):
         corrected = 0
         affected = matched = 0
         rights = list(zip(node.parents[1:], deltas[1:]))
-        for j, (p, dp) in enumerate(rights):
-            right_old = self._old_content(p)
-            fb: dict = {}
-            d_next, n_corr = T.zset_join_delta(
-                get_left, dl, right_old, dp, stats=fb
-            )
-            corrected += n_corr
-            affected += fb.get("affected_keys", 0)
-            matched += fb.get("matched_keys", 0)
-            if j + 1 < len(rights):
-                # the next chained stage's old left is this stage's old output
-                prev_get, prev_right = get_left, right_old
-                get_left = _memo(
-                    lambda g=prev_get, r=prev_right: T.op_join(g(), r)
+        with obs_trace.span("compute", node.name):
+            for j, (p, dp) in enumerate(rights):
+                right_old = self._old_content(p)
+                fb: dict = {}
+                d_next, n_corr = T.zset_join_delta(
+                    get_left, dl, right_old, dp, stats=fb
                 )
-            dl = d_next
+                corrected += n_corr
+                affected += fb.get("affected_keys", 0)
+                matched += fb.get("matched_keys", 0)
+                if j + 1 < len(rights):
+                    # the next chained stage's old left is this stage's old
+                    # output
+                    prev_get, prev_right = get_left, right_old
+                    get_left = _memo(
+                        lambda g=prev_get, r=prev_right: T.op_join(g(), r)
+                    )
+                dl = d_next
         with self._fb_lock:
             if corrected:
                 self.join_fallbacks += 1
@@ -405,6 +431,10 @@ class RoundReport:
     # names the adaptive chooser forced to full recompute this round
     # (mode="adaptive" only; empty otherwise)
     forced_full: tuple[str, ...] = ()
+    # per-node speedup scores of the round's solved graph (index-aligned
+    # with workload.nodes): the planner's predicted per-node benefit that
+    # ``obs.audit`` joins against realized savings from the trace
+    scores: tuple[float, ...] = ()
 
     @property
     def elapsed(self) -> float:
@@ -413,6 +443,11 @@ class RoundReport:
     @property
     def consolidations(self) -> int:
         return self.run.consolidations
+
+    @property
+    def entry_stats(self) -> dict[str, dict[str, int]]:
+        """Per-entry catalog hit/miss/overflow tallies of this round's run."""
+        return self.run.entry_stats
 
 
 @dataclasses.dataclass
@@ -552,8 +587,11 @@ def run_scenario(
                 forced_full=tuple(
                     workload.nodes[v].name for v in sorted(force_full)
                 ),
+                scores=tuple(g.scores),
             )
         )
+        if obs_trace.enabled() and engine.join_fallbacks:
+            METRICS.inc("join_fallbacks", engine.join_fallbacks)
     return ScenarioReport(workload=workload.name, spec=spec, rounds=rounds)
 
 
@@ -650,6 +688,7 @@ def simulate_scenario(
             mode = "sc"
         else:
             raise ValueError(f"unknown method {method!r}")
+        obs_trace.set_round(r)
         sim = simulate_events(
             view, plan, cost_model, mode=mode, n_workers=n_workers,
             n_writers=n_writers,

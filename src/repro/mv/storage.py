@@ -41,6 +41,9 @@ from typing import Mapping
 
 import numpy as np
 
+from ..obs import trace as obs_trace
+from ..obs.metrics import METRICS
+
 Table = Mapping[str, np.ndarray]
 
 # Separator between an MV name and its partition id in the store namespace:
@@ -206,24 +209,29 @@ class DiskStore:
     # -- IO --------------------------------------------------------------------
     def _write_part(self, name: str, part: int, table: Table) -> float:
         """Durable atomic write of one part; throttles on logical bytes."""
-        t0 = time.perf_counter()
-        buf = io.BytesIO()
-        np.savez(buf, **{k: np.asarray(v) for k, v in table.items()})
-        data = buf.getvalue()
-        target = self._path(name, part)
-        tmp = target.with_suffix(".npz.tmp")
-        with open(tmp, "wb") as f:
-            f.write(data)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, target)
-        if self.write_bw:
-            residual = table_nbytes(table) / self.write_bw - (
-                time.perf_counter() - t0
-            )
-            if residual > 0:
-                time.sleep(residual)
-        dt = time.perf_counter() - t0
+        nbytes = table_nbytes(table)
+        with obs_trace.span("io.write", name, nbytes):
+            t0 = time.perf_counter()
+            buf = io.BytesIO()
+            np.savez(buf, **{k: np.asarray(v) for k, v in table.items()})
+            data = buf.getvalue()
+            target = self._path(name, part)
+            tmp = target.with_suffix(".npz.tmp")
+            with open(tmp, "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, target)
+            if self.write_bw:
+                residual = nbytes / self.write_bw - (time.perf_counter() - t0)
+                if residual > 0:
+                    with obs_trace.span("stall.write", name):
+                        time.sleep(residual)
+                    if obs_trace.enabled():
+                        METRICS.inc("stall_seconds.write", residual, entry=name)
+            dt = time.perf_counter() - t0
+        if obs_trace.enabled():
+            METRICS.inc("bytes_written", nbytes, entry=name)
         with self._io_lock:
             self.write_seconds += dt
         return dt
@@ -272,11 +280,14 @@ class DiskStore:
         with np.load(self._path(name, part_id)) as z:
             return {k: z[k] for k in z.files}
 
-    def _throttle_read(self, t0: float, nbytes: int) -> None:
+    def _throttle_read(self, t0: float, nbytes: int, name: str = "") -> None:
         if self.read_bw:
             residual = nbytes / self.read_bw - (time.perf_counter() - t0)
             if residual > 0:
-                time.sleep(residual)
+                with obs_trace.span("stall.read", name):
+                    time.sleep(residual)
+                if obs_trace.enabled():
+                    METRICS.inc("stall_seconds.read", residual, entry=name)
 
     def read(self, name: str) -> dict[str, np.ndarray]:
         return self.read_parts(name)
@@ -296,25 +307,29 @@ class DiskStore:
         included — not the (smaller) consolidated result."""
         from . import tableops as T
 
-        t0 = time.perf_counter()
-        if self.latency:
-            time.sleep(self.latency)
-        ids = self._part_ids(name)
-        loaded = [self._load_part(name, p) for p in ids[start:stop]]
-        if not loaded:
-            raise KeyError(f"{name}: no parts in [{start}, {stop})")
-        raw_bytes = sum(table_nbytes(p) for p in loaded)
-        if start == 0:
-            first = loaded[0]
-            out = T.materialize_delta(first) if T.WEIGHT_COL in first else first
-            for part in loaded[1:]:
-                out = T.apply_delta(out, part)
-        elif len(loaded) == 1:
-            out = loaded[0]
-        else:
-            out = T.concat_tables(loaded)
-        self._throttle_read(t0, raw_bytes)
-        dt = time.perf_counter() - t0
+        with obs_trace.span("io.read", name) as sp:
+            t0 = time.perf_counter()
+            if self.latency:
+                time.sleep(self.latency)
+            ids = self._part_ids(name)
+            loaded = [self._load_part(name, p) for p in ids[start:stop]]
+            if not loaded:
+                raise KeyError(f"{name}: no parts in [{start}, {stop})")
+            raw_bytes = sum(table_nbytes(p) for p in loaded)
+            sp.set(nbytes=raw_bytes)
+            if start == 0:
+                first = loaded[0]
+                out = T.materialize_delta(first) if T.WEIGHT_COL in first else first
+                for part in loaded[1:]:
+                    out = T.apply_delta(out, part)
+            elif len(loaded) == 1:
+                out = loaded[0]
+            else:
+                out = T.concat_tables(loaded)
+            self._throttle_read(t0, raw_bytes, name)
+            dt = time.perf_counter() - t0
+        if obs_trace.enabled():
+            METRICS.inc("bytes_read", raw_bytes, entry=name)
         with self._io_lock:
             self.read_seconds += dt
         return out

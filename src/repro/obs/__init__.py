@@ -1,0 +1,16 @@
+"""Observability for the refresh engine (DESIGN.md §12): span tracing
+(``obs.trace``), the metrics registry (``obs.metrics``), the predicted-vs-
+realized plan audit (``obs.audit``), and Chrome-trace export / validation /
+real-vs-sim diff (``obs.export``).
+
+Everything is off (and allocation-free on the hot path) unless ``SC_TRACE``
+is set or ``trace.enable()`` is called; tracing is passive — traced and
+untraced runs store bitwise-identical MVs. ``audit``/``export`` are
+imported lazily by consumers (``tools/sc_trace.py``) to keep this package's
+import cost at two stdlib-only modules.
+"""
+from . import metrics, trace
+from .metrics import METRICS, MetricsRegistry
+from .trace import Span
+
+__all__ = ["trace", "metrics", "METRICS", "MetricsRegistry", "Span"]

@@ -1,5 +1,10 @@
+import random
+import threading
+
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.mv import CatalogOverflowError, DiskStore, MemoryCatalog, table_nbytes
 
@@ -73,6 +78,55 @@ def test_catalog_clear_resets_peak_and_reset_stats():
     cat.release("c")
     cat.reset_stats()  # keeps residents, resets peak to current usage
     assert "b" in cat and cat.peak_bytes == 30.0
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_catalog_peak_semantics_under_concurrent_put_release(seed):
+    """Property: under racing try_put/release from several threads — with a
+    mid-run ``clear()`` (the engine restart path) and ``reset_stats()``
+    thrown in — byte accounting never corrupts: usage stays within
+    [0, budget], peak never exceeds the budget (atomic admission), and at
+    quiescence usage equals the sum of resident entries, ``reset_stats``
+    re-bases the peak to exactly that, and ``clear`` zeroes everything."""
+    rng = random.Random(seed)
+    budget = 1000.0
+    cat = MemoryCatalog(budget)
+    n_threads, n_ops = 4, 60
+    sizes = [
+        [rng.uniform(1.0, 400.0) for _ in range(n_ops)]
+        for _ in range(n_threads)
+    ]
+    start = threading.Barrier(n_threads + 1)
+
+    def worker(tid):
+        start.wait()
+        for i, size in enumerate(sizes[tid]):
+            name = f"t{tid}e{i}"
+            if cat.try_put(name, object(), size) and i % 3 != 0:
+                cat.release(name)
+            if i % 17 == 0:
+                cat.reset_stats()
+
+    threads = [
+        threading.Thread(target=worker, args=(t,)) for t in range(n_threads)
+    ]
+    for th in threads:
+        th.start()
+    start.wait()
+    cat.clear()  # restart mid-flight: must not break later accounting
+    for th in threads:
+        th.join()
+
+    resident = cat.resident()
+    assert cat.used_bytes == pytest.approx(sum(resident.values()))
+    assert 0.0 <= cat.used_bytes <= budget + 1e-9
+    assert cat.used_bytes <= cat.peak_bytes <= budget + 1e-9
+    cat.reset_stats()
+    assert cat.peak_bytes == pytest.approx(cat.used_bytes)
+    cat.clear()
+    assert cat.used_bytes == 0.0 and cat.peak_bytes == 0.0
+    assert cat.resident() == {} and cat.fits(budget)
 
 
 def test_diskstore_append_parts_roundtrip(tmp_path):
