@@ -40,6 +40,7 @@ def _modules():
         fig14_sweep,
         incremental,
         mqo_bench,
+        multihost_sweep,
         parallel_sweep,
         partition_sweep,
         planner_scale,
@@ -61,6 +62,7 @@ def _modules():
         ("planner_scale", planner_scale.run),
         ("incremental", incremental.run),
         ("mqo_bench", mqo_bench.run),
+        ("multihost_sweep", multihost_sweep.run),
         ("fig13_opttime", fig13_opttime.run),
         ("fig14_sweep", fig14_sweep.run),
         ("real_executor", real_executor.run),
@@ -88,9 +90,14 @@ def _modules():
 # §11): each shared subtree refreshes exactly once per round, merged output
 # bitwise-identical to unshared, >= 1.3x refresh speedup at k=1, and the
 # shared intermediates earn Memory Catalog residency under default budget.
+# multihost_sweep asserts the multi-host acceptance claims (DESIGN.md §13):
+# e2e refresh improves 1 -> 4 hosts on the Zipf-skewed workload, every
+# multi-host store is bitwise identical to the single-host run, and the
+# injected-fault scenario (host killed mid-round) recovers via re-dispatch
+# with the store still bitwise identical to the fault-free single-host run.
 SMOKE_MODULES = [
-    "incremental", "mqo_bench", "partition_sweep", "planner_scale",
-    "tableops_bench",
+    "incremental", "mqo_bench", "multihost_sweep", "partition_sweep",
+    "planner_scale", "tableops_bench",
 ]
 
 

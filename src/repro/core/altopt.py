@@ -466,6 +466,152 @@ def hierarchical_plan(
     )
 
 
+# ---------------------------------------------------------------------------
+# Multi-host planning: per-host memory budgets (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MultiHostPlan:
+    """A partition-granular refresh plan across ``H`` hosts, each with its
+    own Memory Catalog budget.
+
+    Because the expanded DAG is co-partitioned and placement is per
+    partition, the graph decomposes into disjoint per-host subgraphs
+    (``MVGraph.host_slices``): each host executes its own ``Plan`` over its
+    own partitions, independently feasible under *its* budget at *its*
+    worker count — per-host budgets are separate knapsack constraints, the
+    extra dimension of the per-slice decomposition (DESIGN.md §13). Cross-
+    host constraints only appear when fault re-dispatch moves partitions,
+    and re-dispatched tasks run unflagged, so they can never breach a
+    surviving host's budget.
+
+    ``host_plans[h]`` is in the *local* node ids of host ``h``'s subgraph;
+    ``host_nodes[h][i]`` maps local id ``i`` back to the expanded graph.
+    One host degenerates bitwise to today's single-host plan.
+    """
+
+    host_plans: tuple[Plan, ...]
+    host_nodes: tuple[tuple[int, ...], ...]
+    placement: tuple[int, ...]  # partition -> host
+    host_budgets: tuple[float, ...]
+    n_partitions: int
+
+    @property
+    def n_hosts(self) -> int:
+        return len(self.host_plans)
+
+    def host_order(self, h: int) -> tuple[int, ...]:
+        """Host ``h``'s execution order in expanded node ids."""
+        nodes = self.host_nodes[h]
+        return tuple(nodes[i] for i in self.host_plans[h].order)
+
+    def host_flagged(self, h: int) -> frozenset[int]:
+        """Host ``h``'s flagged set in expanded node ids."""
+        nodes = self.host_nodes[h]
+        return frozenset(nodes[i] for i in self.host_plans[h].flagged)
+
+    @property
+    def flagged(self) -> frozenset[int]:
+        """All flagged expanded node ids, across hosts."""
+        out: set[int] = set()
+        for h in range(self.n_hosts):
+            out |= self.host_flagged(h)
+        return frozenset(out)
+
+    @property
+    def score(self) -> float:
+        return sum(p.score for p in self.host_plans)
+
+    def host_of(self, expanded_id: int) -> int:
+        """The host an expanded node is placed on (by its partition)."""
+        return self.placement[expanded_id % self.n_partitions]
+
+
+def default_placement(n_partitions: int, n_hosts: int) -> tuple[int, ...]:
+    """Hash placement: partition ``p`` on host ``p % H`` (uniform keys)."""
+    H = max(int(n_hosts), 1)
+    return tuple(p % H for p in range(max(int(n_partitions), 1)))
+
+
+def solve_multihost(
+    expanded: MVGraph,
+    host_budgets: Sequence[float],
+    n_partitions: int,
+    placement: Sequence[int] | None = None,
+    flat_threshold: int = FLAT_THRESHOLD,
+    **solve_kw,
+) -> MultiHostPlan:
+    """Per-host-budget partition-granular solve over an already-expanded
+    graph (DESIGN.md §13) — ``hierarchical_plan`` with a host dimension.
+
+    The expanded graph is sliced by ``placement`` (``MVGraph.host_slices``)
+    and each host's subgraph — itself a valid ``P_h``-way expansion — gets
+    its own hierarchical solve against that host's budget, so every host's
+    resident set is feasible under its own budget at the configured worker
+    count by ``hierarchical_plan``'s existing invariant. ``solve_kw`` obeys
+    the same whitelist as ``solve_hierarchical``. With one host this *is*
+    ``hierarchical_plan(expanded, host_budgets[0], P)`` — bitwise today's
+    plan, exact-flat fallback included.
+    """
+    P = max(int(n_partitions), 1)
+    budgets = tuple(float(b) for b in host_budgets)
+    if not budgets:
+        raise ValueError("need at least one host budget")
+    unsupported = set(solve_kw) - {
+        "n_workers", "max_entry_bytes", "order_solver", "order_kwargs",
+        "max_iters",
+    }
+    if unsupported:
+        raise TypeError(
+            f"solve_multihost does not accept {sorted(unsupported)} "
+            "(same whitelist as solve_hierarchical)"
+        )
+    if placement is None:
+        placement = default_placement(P, len(budgets))
+    placement = tuple(int(h) for h in placement)
+    if len(placement) != P:
+        raise ValueError(
+            f"placement covers {len(placement)} partitions, expected {P}"
+        )
+    if placement and not (0 <= min(placement) <= max(placement) < len(budgets)):
+        raise ValueError("placement names a host with no budget")
+    if len(budgets) == 1:
+        plan = hierarchical_plan(
+            expanded, budgets[0], P, flat_threshold=flat_threshold, **solve_kw
+        )
+        return MultiHostPlan(
+            host_plans=(plan,),
+            host_nodes=(tuple(range(expanded.n)),),
+            placement=placement,
+            host_budgets=budgets,
+            n_partitions=P,
+        )
+    host_plans: list[Plan] = []
+    host_nodes: list[tuple[int, ...]] = []
+    slices = list(expanded.host_slices(P, placement))
+    # host_slices covers 0..max(placement); hosts beyond it hold nothing
+    slices += [((), ())] * (len(budgets) - len(slices))
+    for h, (parts, keep) in enumerate(slices):
+        sub = expanded.subgraph(keep)
+        if not parts:
+            host_plans.append(serial_plan(sub))
+        else:
+            host_plans.append(
+                hierarchical_plan(
+                    sub, budgets[h], len(parts),
+                    flat_threshold=flat_threshold, **solve_kw,
+                )
+            )
+        host_nodes.append(tuple(keep))
+    return MultiHostPlan(
+        host_plans=tuple(host_plans),
+        host_nodes=tuple(host_nodes),
+        placement=placement,
+        host_budgets=budgets,
+        n_partitions=P,
+    )
+
+
 def solve_hierarchical(
     graph: MVGraph,
     budget: float,
@@ -473,6 +619,8 @@ def solve_hierarchical(
     cost_model=None,
     shares: Sequence[float] | None = None,
     flat_threshold: int = FLAT_THRESHOLD,
+    host_budgets: Sequence[float] | None = None,
+    placement: Sequence[int] | None = None,
     **solve_kw,
 ) -> PartitionedPlan:
     """Partition-granular solve that scales to large P (DESIGN.md §8).
@@ -492,6 +640,12 @@ def solve_hierarchical(
     side of ``flat_threshold`` the instance lands on; anything else (e.g.
     a flat-only ``node_solver``) raises instead of being silently ignored
     on large instances.
+
+    With ``host_budgets`` (DESIGN.md §13) the solve gains a host dimension
+    and returns a ``MultiHostPlan`` instead: partitions are placed on hosts
+    (``placement``, hash by default) and each host's resident set is planned
+    feasible under its *own* budget via ``solve_multihost``. ``budget`` is
+    ignored on that path — the per-host budgets are the constraints.
     """
     P = max(int(n_partitions), 1)
     unsupported = set(solve_kw) - {
@@ -503,6 +657,16 @@ def solve_hierarchical(
             f"solve_hierarchical does not accept {sorted(unsupported)}: the "
             "hierarchical path could not honor them, so the same call would "
             "plan differently on either side of flat_threshold"
+        )
+    if host_budgets is not None:
+        expanded, _ = graph.expand_partitions(P, shares)
+        if cost_model is not None:
+            from .speedup import rescore
+
+            expanded = rescore(expanded, cost_model)
+        return solve_multihost(
+            expanded, host_budgets, P, placement=placement,
+            flat_threshold=flat_threshold, **solve_kw,
         )
     if P == 1 or graph.n * P <= flat_threshold:
         # every supported key maps onto the flat solve too (max_iters is

@@ -290,6 +290,46 @@ class MVGraph:
             )
         return tuple(curves)
 
+    def host_slices(
+        self, n_partitions: int, placement: Sequence[int]
+    ) -> tuple[tuple[tuple[int, ...], tuple[int, ...]], ...]:
+        """Host-wise decomposition of a P-way *expanded* graph (§13).
+
+        ``self`` must follow the ``expand_partitions`` layout and
+        ``placement[p]`` names the host partition ``p`` runs on. Because
+        edges are co-partitioned, the expanded DAG is the disjoint union of
+        its per-host induced subgraphs — each host's resident set is charged
+        only by its own partitions, which is what makes per-host memory
+        budgets *separate* knapsack constraints.
+
+        Returns, for host ``h`` (0..max(placement)), a pair
+        ``(parts, keep)``: the partitions placed on ``h`` in ascending order
+        and the expanded node ids of those partitions in v-major order —
+        exactly the ``expand_partitions`` layout again, so
+        ``self.subgraph(keep)`` is itself a valid ``len(parts)``-way
+        expansion that the hierarchical planner runs on unchanged. Hosts
+        with no partitions get empty pairs.
+        """
+        P = max(int(n_partitions), 1)
+        if self.n % P != 0:
+            raise ValueError(
+                f"graph with {self.n} nodes is not a {P}-way expansion"
+            )
+        if len(placement) != P:
+            raise ValueError(
+                f"placement names {len(placement)} partitions, graph has {P}"
+            )
+        n_base = self.n // P
+        n_hosts = max(int(h) for h in placement) + 1
+        out = []
+        for h in range(n_hosts):
+            parts = tuple(p for p in range(P) if int(placement[p]) == h)
+            keep = tuple(
+                v * P + p for v in range(n_base) for p in parts
+            )
+            out.append((parts, keep))
+        return tuple(out)
+
     # -- misc ------------------------------------------------------------------
     def subgraph(self, keep: Sequence[int]) -> "MVGraph":
         """The induced subgraph on ``keep``, nodes renumbered to

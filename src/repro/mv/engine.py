@@ -154,6 +154,68 @@ class ScheduleCore:
         return released
 
 
+class SubSchedule:
+    """One host's slice of a multi-host round: the in-order-issue + window-k
+    dispatch discipline over a sub-order of the expanded graph, with
+    completion reported externally.
+
+    ``ScheduleCore`` owns a whole workload's DAG bookkeeping in one process;
+    the multi-host coordinator (``mv.multihost``) runs one discipline *per
+    host* over disjoint sub-orders, where completions can arrive from other
+    hosts (fault re-dispatch) and parent readiness depends on cross-host
+    durability the coordinator alone knows. This core keeps only the
+    discipline that makes per-host plans feasibility-checkable — ``order[i]``
+    may be issued only once ``order[i-k]`` has completed — and takes parent
+    readiness as a predicate. Completed nodes at the head (statics, nodes
+    that became durable elsewhere) are skipped, fault re-dispatch appends
+    recovered nodes with ``extend``, and ``reopen`` rolls back a completion
+    that died with the host holding it."""
+
+    def __init__(self, order: Sequence[int], n_workers: int = 1):
+        self.order = list(order)
+        self.window = max(int(n_workers), 1)
+        self.next_issue = 0
+        self._done: set[int] = set()
+
+    def complete(self, v: int) -> None:
+        self._done.add(v)
+
+    def reopen(self, v: int) -> None:
+        self._done.discard(v)
+
+    def extend(self, nodes: Iterable[int]) -> None:
+        self.order.extend(nodes)
+
+    def unissued(self) -> list[int]:
+        """Nodes not yet issued nor completed, in order."""
+        return [v for v in self.order[self.next_issue:] if v not in self._done]
+
+    def next_ready(self, parent_ok) -> int | None:
+        """Next issuable node, or None (exhausted / window blocked / head's
+        parents not ready per ``parent_ok``). Does not advance — call
+        ``issue`` to commit."""
+        while (
+            self.next_issue < len(self.order)
+            and self.order[self.next_issue] in self._done
+        ):
+            self.next_issue += 1
+        i = self.next_issue
+        if i >= len(self.order):
+            return None
+        w = i - self.window
+        if w >= 0 and self.order[w] not in self._done:
+            return None
+        v = self.order[i]
+        if not parent_ok(v):
+            return None
+        return v
+
+    def issue(self) -> int:
+        v = self.order[self.next_issue]
+        self.next_issue += 1
+        return v
+
+
 # ---------------------------------------------------------------------------
 # Real (threaded) backend
 # ---------------------------------------------------------------------------

@@ -409,6 +409,50 @@ class IncrementalEngine(ThreadedEngine):
 # Scenario drivers
 # ---------------------------------------------------------------------------
 
+def round_view(
+    workload: Workload,
+    spec: UpdateSpec,
+    cost_model: CostModel,
+    round_idx: int,
+    store: DiskStore | None = None,
+    fallback_rate: float = 1.0,
+) -> tuple[Workload, list[float], frozenset]:
+    """One round's planner inputs: ``(view, sizes, force_full)``.
+
+    Round 0 plans the initial build against the workload's modeled sizes;
+    later rounds size every node from the store manifest (the paper's
+    "metrics from previous runs") and plan against the refresh view
+    evaluated one round ahead of *current* sizes (``round_idx=1`` inside
+    ``incremental_view``) rather than compounding growth from round 0. The
+    JOIN correction term uses the caller's calibrated ``fallback_rate``
+    (``FallbackRateEwma``), and ``spec.mode="adaptive"`` additionally
+    returns the per-view full-recompute choices (``adaptive_force_full``)
+    the view was evaluated under. Shared by ``run_scenario`` and the
+    multi-host coordinator (``mv.multihost``) so both drivers plan every
+    round from identical inputs."""
+    if round_idx == 0:
+        return workload, [float(n.size) for n in workload.nodes], frozenset()
+    manifest = store.manifest() if store is not None else {}
+    sizes = [
+        float(manifest.get(n.name, n.size)) or 1.0 for n in workload.nodes
+    ]
+    force_full: frozenset = frozenset()
+    if spec.mode == "adaptive":
+        # Enzyme-style per-view choice: nodes whose modeled delta refresh
+        # costs more than recomputing them outright (under the calibrated
+        # fallback rate) run full this round — the planner prices the same
+        # decision via the view below.
+        force_full = adaptive_force_full(
+            workload, spec, cost_model, 1, sizes=sizes,
+            fallback_rate=fallback_rate,
+        )
+    view = incremental_view(
+        workload, spec, 1, sizes=sizes, fallback_rate=fallback_rate,
+        force_full=force_full,
+    )
+    return view, sizes, force_full
+
+
 @dataclasses.dataclass
 class RoundReport:
     round_idx: int
@@ -522,36 +566,15 @@ def run_scenario(
     fb_ewma = FallbackRateEwma()  # observed fallback-rate estimator
     for r in range(spec.n_rounds + 1):
         rate_used = fb_ewma.rate
-        force_full: frozenset[int] = frozenset()
-        if r == 0:
-            view = workload
-            sizes = [float(n.size) for n in workload.nodes]
-        else:
-            manifest = store.manifest()
-            sizes = [
-                float(manifest.get(n.name, n.size)) or 1.0
-                for n in workload.nodes
-            ]
-            # manifest sizes already include all growth up to round r-1, so
-            # the view is evaluated one round ahead of *current* sizes
-            # (round_idx=1) rather than compounding growth from round 0.
-            # The JOIN correction term uses the EWMA of the per-round
-            # fallback rates observed so far (1.0 until the first
-            # observation) — a single churn spike decays instead of biasing
-            # every later round the way a cumulative ratio would.
-            if spec.mode == "adaptive":
-                # Enzyme-style per-view choice: nodes whose modeled delta
-                # refresh costs more than recomputing them outright (under
-                # the calibrated fallback rate) run full this round — the
-                # planner prices the same decision via the view below.
-                force_full = adaptive_force_full(
-                    workload, spec, cost_model, 1, sizes=sizes,
-                    fallback_rate=rate_used,
-                )
-            view = incremental_view(
-                workload, spec, 1, sizes=sizes, fallback_rate=rate_used,
-                force_full=force_full,
-            )
+        # manifest sizes already include all growth up to round r-1; the
+        # JOIN correction term uses the EWMA of the per-round fallback
+        # rates observed so far (1.0 until the first observation) — a
+        # single churn spike decays instead of biasing every later round
+        # the way a cumulative ratio would (round_view).
+        view, sizes, force_full = round_view(
+            workload, spec, cost_model, r, store=store,
+            fallback_rate=rate_used,
+        )
         g = view.to_graph(cost_model)
         if not optimize:
             plan = serial_plan(g)

@@ -216,7 +216,14 @@ class DiskStore:
             np.savez(buf, **{k: np.asarray(v) for k, v in table.items()})
             data = buf.getvalue()
             target = self._path(name, part)
-            tmp = target.with_suffix(".npz.tmp")
+            # writer-unique tmp name: under multi-host speculation two
+            # workers may durably write the *same* part id concurrently
+            # (identical bytes — replayed tasks are deterministic); each
+            # needs its own staging file so one rename cannot strand the
+            # other's, and whichever os.replace lands last wins harmlessly
+            tmp = target.with_suffix(
+                f".npz.tmp{os.getpid()}-{threading.get_ident()}"
+            )
             with open(tmp, "wb") as f:
                 f.write(data)
                 f.flush()
@@ -265,6 +272,56 @@ class DiskStore:
             dead=_tombstone_bytes_of(delta),
         )
         return dt
+
+    # -- split write/commit (multi-host refresh, DESIGN.md §13) ----------------
+    # A multi-host round shares one store root across worker processes, but
+    # the manifest keeps a single writer: workers persist part *files* with
+    # ``write_part_file`` and report back; only the coordinator process runs
+    # ``commit_part``. A worker that dies mid-task leaves at most an orphan
+    # (or half-written ``.tmp``) part file the manifest never references, so
+    # replaying the task on another host — same coordinator-assigned part id,
+    # same deterministic bytes — is safe: the commit happens once, after
+    # whichever attempt's durable write reports first.
+
+    def next_part_id(self, name: str) -> int:
+        """Smallest part id above every manifest-referenced one — the id
+        ``write``/``append`` would pick next. A multi-host coordinator
+        assigns it at dispatch so replayed tasks rewrite the *same* part
+        file (idempotent recovery)."""
+        return max(self._part_ids(name), default=-1) + 1
+
+    def write_part_file(self, name: str, part_id: int, table: Table) -> float:
+        """Durably write one part file WITHOUT committing it to the manifest
+        (fsync + atomic rename; throttled like any write). The content is
+        invisible to readers until ``commit_part`` references it. Returns
+        elapsed seconds."""
+        return self._write_part(name, int(part_id), table)
+
+    def commit_part(
+        self, name: str, part_id: int, nbytes: int, append: bool, dead: int = 0
+    ) -> None:
+        """Commit an externally written (``write_part_file``) part: append it
+        to the entry's part list, or — ``append=False`` — replace the entry
+        with this single part and sweep the now-unreferenced old part files.
+        Metadata-only on this store object; the caller must guarantee the
+        part file is already durable."""
+        part_id = int(part_id)
+        old_ids = [] if append else [
+            p for p in self._part_ids(name) if p != part_id
+        ]
+        self._record(name, int(nbytes), part_id, append=append, dead=int(dead))
+        for p in old_ids:
+            self._path(name, p).unlink(missing_ok=True)
+
+    def invalidate_cache(self) -> None:
+        """Drop the parsed-manifest cache so the next read reparses the file.
+
+        The single-writer caching assumption (``_entries``) does not hold for
+        a multi-host worker: its manifest is committed by the coordinator
+        process. Workers invalidate before each task so committed parents
+        are visible."""
+        with self._manifest_lock:
+            self._entries_cache = None
 
     def consolidate(self, name: str) -> float:
         """Rewrite a multi-part MV as its single consolidated live part,

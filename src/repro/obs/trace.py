@@ -4,7 +4,12 @@ One module-level recorder serves the whole process. Spans are recorded by
 both execution backends under the *same schema* — the real ``ThreadedEngine``
 (wall-clock seconds, ``track="real"``) and ``engine.simulate_events`` (event
 clock, ``track="sim"``) — so simulated and real timelines overlay directly
-in the Chrome-trace export (``obs.export``).
+in the Chrome-trace export (``obs.export``). The multi-host coordinator
+(``mv.multihost``) adds one track per host (``track="host{h}"``): forked
+workers inherit the trace origin ``_t0``, ship their spans back with each
+result message, and the coordinator re-records them on the owning host's
+track — so one Perfetto export shows every host's timeline side by side on
+a common clock.
 
 Span categories (the shared vocabulary; dotted suffixes refine a family):
 
@@ -22,6 +27,9 @@ Span categories (the shared vocabulary; dotted suffixes refine a family):
 ``catalog.bytes``         catalog occupancy counter samples
 ``round``                 one engine run / one simulated round (the frame
                           every other span of that run nests inside)
+``redispatch``            a task moved off a lost/straggling host by the
+                          multi-host coordinator (instant, on the receiving
+                          host's track)
 ========================  ==================================================
 
 Every span is keyed by ``(mv, partition, round, worker)``: ``mv``/

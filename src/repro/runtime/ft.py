@@ -22,8 +22,6 @@ import statistics
 import threading
 from typing import Any, Callable
 
-import jax
-
 
 class PreemptionHandler:
     def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
@@ -97,7 +95,14 @@ class StragglerDetector:
 
 def elastic_restore(flat: dict, template: Any, shardings: Any = None) -> Any:
     """Rebuild a state pytree from a topology-agnostic checkpoint dict on the
-    *current* mesh (which may differ from the one that saved it)."""
+    *current* mesh (which may differ from the one that saved it).
+
+    jax is imported here, not at module top: ``PreemptionHandler`` and
+    ``StragglerDetector`` are wired into the multi-host MV refresh path
+    (``mv.multihost``), whose forked worker processes must not inherit an
+    initialized accelerator runtime just to poll a signal flag."""
+    import jax
+
     paths = jax.tree_util.tree_flatten_with_path(template)
     out = []
     shard_leaves = (

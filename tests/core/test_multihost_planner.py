@@ -1,0 +1,152 @@
+"""Multi-host planner (DESIGN.md §13): per-host knapsack feasibility and
+the single-host degenerate case.
+
+* over random DAGs × P × placements × per-host budgets × worker counts,
+  every host's plan is topological on its sub-DAG and fits that host's own
+  budget under exact k-worker windowed residency accounting — no
+  interleaving can exceed any host's budget;
+* one host degenerates bitwise (order / flagged / score / memory — the
+  semantic plan fields; ``solve_seconds`` is wall clock) to today's
+  ``solve_hierarchical`` plan;
+* placement and kwargs are validated loudly.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    default_placement,
+    solve_hierarchical,
+    solve_multihost,
+)
+from repro.core.speedup import (
+    EFFECTIVE_NFS_COST_MODEL,
+    partition_shares,
+    rescore,
+)
+from repro.mv import generate_workload
+
+CM = EFFECTIVE_NFS_COST_MODEL
+
+
+def assert_plans_semantically_equal(a, b):
+    assert a.order == b.order
+    assert a.flagged == b.flagged
+    assert a.score == b.score
+    assert a.peak_memory == b.peak_memory
+    assert a.avg_memory == b.avg_memory
+
+
+def expanded_graph(n, P, seed, skew):
+    g = generate_workload(n, seed=seed).to_graph(CM)
+    shares = partition_shares(P, skew=skew, seed=seed)
+    expanded, _ = g.expand_partitions(P, shares)
+    return g, shares, rescore(expanded, CM)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_every_host_plan_fits_its_own_budget(data):
+    """Hypothesis sweep: random DAG × P × placement × host budgets × k —
+    each host's resident set is feasible under its *own* budget at every
+    step of every k-worker interleaving of its sub-plan."""
+    seed = data.draw(st.integers(0, 10_000))
+    n = data.draw(st.integers(4, 10))
+    P = data.draw(st.sampled_from([2, 4, 8]))
+    H = data.draw(st.sampled_from([1, 2, 3, 4]))
+    k = data.draw(st.sampled_from([1, 2, 4]))
+    skew = data.draw(st.sampled_from([0.0, 1.2]))
+    fracs = [data.draw(st.floats(0.02, 0.6)) for _ in range(H)]
+    random_placement = data.draw(st.booleans())
+    g, shares, expanded = expanded_graph(n, P, seed, skew)
+    budgets = [sum(g.sizes) / H * f for f in fracs]
+    if random_placement:
+        placement = tuple(
+            data.draw(st.integers(0, H - 1)) for _ in range(P)
+        )
+    else:
+        placement = default_placement(P, H)
+    plan = solve_hierarchical(
+        g, max(budgets), P, cost_model=CM, shares=shares, n_workers=k,
+        host_budgets=budgets, placement=placement, flat_threshold=0,
+    )
+    assert plan.n_hosts == H
+    assert plan.placement == tuple(placement)
+    seen = []
+    for h in range(H):
+        sub = expanded.subgraph(list(plan.host_nodes[h]))
+        hp = plan.host_plans[h]
+        assert sub.is_topological(list(hp.order))
+        assert sub.is_feasible(hp.flagged, hp.order, budgets[h], k), (
+            f"seed={seed} n={n} P={P} H={H} k={k} host={h}"
+        )
+        seen.extend(plan.host_nodes[h])
+        # the host's slice contains exactly its placement's partitions
+        for v in plan.host_nodes[h]:
+            assert placement[v % P] == h
+    # hosts partition the expanded node set
+    assert sorted(seen) == list(range(expanded.n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4, 8]),
+       st.sampled_from([1, 2, 4]), st.floats(0.05, 0.6))
+def test_one_host_degenerates_bitwise_to_hierarchical(seed, P, k, frac):
+    g = generate_workload(8, seed=seed).to_graph(CM)
+    shares = partition_shares(P, skew=1.1, seed=seed)
+    budget = sum(g.sizes) * frac
+    ref = solve_hierarchical(
+        g, budget, P, cost_model=CM, shares=shares, n_workers=k
+    )
+    mh = solve_hierarchical(
+        g, budget, P, cost_model=CM, shares=shares, n_workers=k,
+        host_budgets=[budget],
+    )
+    assert mh.n_hosts == 1
+    assert mh.host_nodes == (tuple(range(g.n * P)),)
+    assert_plans_semantically_equal(mh.host_plans[0], ref.plan)
+    assert mh.flagged == ref.plan.flagged
+    assert mh.score == ref.plan.score
+
+
+def test_multihost_plan_accessors_are_consistent():
+    g = generate_workload(8, seed=3).to_graph(CM)
+    shares = partition_shares(4, skew=1.0, seed=3)
+    budget = sum(g.sizes) * 0.3
+    plan = solve_hierarchical(
+        g, budget, 4, cost_model=CM, shares=shares,
+        host_budgets=[budget / 2, budget / 2],
+    )
+    union = set()
+    for h in range(plan.n_hosts):
+        order = plan.host_order(h)
+        flagged = plan.host_flagged(h)
+        assert set(order) == set(plan.host_nodes[h])
+        assert flagged <= set(order)
+        for v in order:
+            assert plan.host_of(v) == h
+        union |= flagged
+    assert plan.flagged == frozenset(union)
+
+
+def test_placement_and_kwargs_validated():
+    g = generate_workload(8, seed=3).to_graph(CM)
+    shares = partition_shares(4, skew=1.0, seed=3)
+    budget = sum(g.sizes) * 0.3
+    with pytest.raises(ValueError, match="placement"):
+        solve_hierarchical(
+            g, budget, 4, cost_model=CM, shares=shares,
+            host_budgets=[budget] * 2, placement=(0, 1),  # wrong length
+        )
+    with pytest.raises(ValueError):
+        solve_hierarchical(
+            g, budget, 4, cost_model=CM, shares=shares,
+            host_budgets=[budget] * 2, placement=(0, 5, 0, 1),  # host 5
+        )
+    with pytest.raises(TypeError, match="node_solver"):
+        solve_hierarchical(
+            g, budget, 4, host_budgets=[budget] * 2, node_solver="greedy"
+        )
+    expanded, _ = g.expand_partitions(4, shares)
+    with pytest.raises(ValueError):
+        solve_multihost(expanded, [], 4)  # no hosts

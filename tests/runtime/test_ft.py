@@ -4,6 +4,29 @@ import signal
 from repro.runtime import PreemptionHandler, StragglerDetector
 
 
+def test_preemption_install_uninstall_restores_handlers():
+    """uninstall() must put back exactly the handlers install() displaced —
+    a worker that drains and exits leaves the process signal table as it
+    found it (nested handlers in the multi-host workers depend on this)."""
+    sentinel_calls = []
+
+    def sentinel(signum, frame):
+        sentinel_calls.append(signum)
+
+    prev = signal.signal(signal.SIGUSR1, sentinel)
+    try:
+        h = PreemptionHandler(signals=(signal.SIGUSR1,)).install()
+        assert signal.getsignal(signal.SIGUSR1) == h._on_signal
+        h.uninstall()
+        assert signal.getsignal(signal.SIGUSR1) is sentinel
+        assert not h._prev  # uninstall is idempotent: nothing left to restore
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert sentinel_calls == [signal.SIGUSR1]
+        assert not h.preempted  # the displaced handler got the signal, not us
+    finally:
+        signal.signal(signal.SIGUSR1, prev)
+
+
 def test_preemption_flag_on_sigterm():
     h = PreemptionHandler(signals=(signal.SIGUSR1,)).install()
     try:
@@ -40,3 +63,32 @@ def test_straggler_recovery_resets_strikes():
     det.observe(2, [1.0, 1.0])  # recovered before 3rd strike
     assert det.observe(3, [1.0, 1.0]) == []
     assert not det.events
+
+
+def test_straggler_flag_rearms_after_reporting():
+    """Flagging consumes the strikes: a host that stays slow is re-flagged
+    only after another full ``patience`` run, so the driver is not spammed
+    every step while it re-dispatches."""
+    det = StragglerDetector(n_hosts=4, threshold=2.0, patience=2, ewma=1.0)
+    slow = [1.0, 1.0, 1.0, 9.0]
+    flags = [det.observe(s, slow) for s in range(6)]
+    flagged_steps = [s for s, f in enumerate(flags) if f == [3]]
+    assert flagged_steps == [1, 3, 5]  # every `patience` steps, not every step
+    assert [e.step for e in det.events] == flagged_steps
+
+
+def test_straggler_patience_exact_boundary():
+    """patience=1 flags on the first slow observation; patience=3 needs
+    exactly three consecutive ones (an interruption restarts the count)."""
+    eager = StragglerDetector(n_hosts=3, threshold=2.0, patience=1, ewma=1.0)
+    assert eager.observe(0, [1.0, 1.0, 9.0]) == [2]
+    det = StragglerDetector(n_hosts=3, threshold=2.0, patience=3, ewma=1.0)
+    assert det.observe(0, [1.0, 1.0, 9.0]) == []
+    assert det.observe(1, [1.0, 1.0, 9.0]) == []
+    assert det.observe(2, [1.0, 1.0, 1.0]) == []  # streak broken
+    assert det.observe(3, [1.0, 1.0, 9.0]) == []
+    assert det.observe(4, [1.0, 1.0, 9.0]) == []
+    assert det.observe(5, [1.0, 1.0, 9.0]) == [2]
+    ev = det.events[-1]
+    assert (ev.step, ev.host) == (5, 2)
+    assert ev.duration > 2.0 * ev.median
